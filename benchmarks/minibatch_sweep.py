@@ -1,0 +1,53 @@
+"""Beyond-paper: client-minibatch sweep for SVRP — rounds-to-eps vs b.
+
+Shows the datacenter trade the DeepSVRP cohort design exploits: total
+communication stays roughly flat in b while the number of ROUNDS (wall-clock
+under parallel clients) drops.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import theorem2_stepsize
+from repro.core.minibatch import run_svrp_minibatch
+from repro.problems import make_synthetic_quadratic
+
+EPS = 1e-12
+
+
+def run(quick: bool = False):
+    M = 64
+    prob = make_synthetic_quadratic(num_clients=M, dim=24, mu=1.0, L=800.0,
+                                    delta=8.0, seed=0)
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    eta = theorem2_stepsize(mu, delta)
+    x_star = prob.minimizer()
+    x0 = jnp.zeros(prob.dim)
+
+    rows = []
+    bs = [1, 4, 16] if quick else [1, 2, 4, 8, 16, 32, 64]
+    for b in bs:
+        # scaling laws for minibatch clients: variance ~ delta^2/b allows
+        # eta*b; refresh can afford p*b (its 3pM cost grows like the 2b
+        # per-round cost).  Measured: rounds drop ~b-fold, comm stays flat.
+        res = run_svrp_minibatch(prob, x0, x_star, eta=eta * b, p=min(b / M, 1.0),
+                                 batch_clients=b, num_steps=4000,
+                                 key=jax.random.key(0))
+        d2 = np.asarray(res.dist_sq)
+        hit = np.nonzero(d2 <= EPS)[0]
+        rounds = int(hit[0]) + 1 if len(hit) else -1
+        comm = int(np.asarray(res.comm)[hit[0]]) if len(hit) else -1
+        rows.append((b, rounds, comm))
+    return rows
+
+
+if __name__ == "__main__":
+    print("b,rounds_to_eps,comm_to_eps")
+    for b, r, c in run(quick=True):
+        print(f"{b},{r},{c}")

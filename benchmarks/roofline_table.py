@@ -1,0 +1,69 @@
+"""Aggregate the dry-run JSON records into the §Roofline table (markdown +
+CSV).  Reads experiments/dryrun/*.json (written by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "internvl2-76b", "qwen2-1.5b", "granite-3-2b", "llama3.2-3b", "zamba2-2.7b",
+    "qwen3-moe-235b-a22b", "seamless-m4t-large-v2", "rwkv6-1.6b", "qwen3-4b",
+    "deepseek-moe-16b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname="experiments/dryrun", mesh="16x16"):
+    recs = {}
+    for fn in glob.glob(os.path.join(dirname, "*.json")):
+        r = json.load(open(fn))
+        if r.get("mesh") != mesh and r.get("status") != "skipped":
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def run(quick: bool = False, mesh="16x16"):
+    recs = load(mesh=mesh)
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                rows.append((arch, shape, "SKIP", r["reason"][:40], "", "", "", ""))
+                continue
+            if r["status"] != "ok":
+                rows.append((arch, shape, "FAIL", r.get("error", "")[:40], "", "", "", ""))
+                continue
+            rf = r["roofline"]
+            rows.append(
+                (
+                    arch,
+                    shape,
+                    f"{rf['compute_s'] * 1e3:.2f}",
+                    f"{rf['memory_s'] * 1e3:.2f}",
+                    f"{rf['collective_s'] * 1e3:.2f}",
+                    rf["dominant"],
+                    f"{100 * (r.get('useful_flops_ratio') or 0):.0f}%",
+                    f"{(r['memory']['argument_bytes'] or 0) / 2**30:.2f}",
+                )
+            )
+    return rows
+
+
+def markdown(mesh="16x16") -> str:
+    rows = run(mesh=mesh)
+    out = [
+        f"| arch | shape | compute ms | memory ms | collective ms | dominant | useful | args GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(markdown())

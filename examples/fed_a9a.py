@@ -1,0 +1,70 @@
+"""The paper's real-data experiment (Fig. 1 bottom row): ridge regression on
+a9a-style data partitioned across M clients, all four methods compared.
+
+    PYTHONPATH=src python examples/fed_a9a.py --clients 20
+
+The container is offline, so features are re-synthesized with a9a's published
+statistics (123 binary features, ~14 nnz/row) and clients subsample a common
+pool i.i.d. — exactly the mechanism that makes delta small (Section 9).
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    run_acc_extragradient,
+    run_scaffold,
+    run_svrg,
+    run_svrp,
+    theorem2_stepsize,
+)
+from repro.problems import make_ridge_problem
+from repro.problems.logistic import make_a9a_like_problem
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--comm-budget", type=int, default=10_000)
+    args = ap.parse_args()
+
+    lp = make_a9a_like_problem(num_clients=args.clients, n_per_client=2000,
+                               n_pool=8000, lam=0.1, seed=0)
+    prob = make_ridge_problem(np.asarray(lp.Z), np.asarray(lp.y), lam=0.1)
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    L = float(prob.smoothness_max())
+    M = prob.num_clients
+    print(f"a9a-like ridge: M={M}  measured L={L:.2f}  delta={delta:.3f}  mu={mu:.2f}")
+
+    x_star = prob.minimizer()
+    x0 = jnp.zeros(prob.dim)
+    key = jax.random.key(0)
+    budget = args.comm_budget
+
+    runs = {
+        "svrp": run_svrp(prob, x0, x_star, eta=theorem2_stepsize(mu, delta), p=1 / M,
+                         num_steps=budget // 5, key=key),
+        "svrg": run_svrg(prob, x0, x_star, stepsize=1 / (6 * L), p=1 / M,
+                         num_steps=budget // 5, key=key),
+        "scaffold": run_scaffold(prob, x0, x_star, local_lr=1 / (4 * L), global_lr=1.0,
+                                 local_steps=5, num_rounds=budget // 2, key=key),
+        "acc_eg": run_acc_extragradient(prob, x0, x_star,
+                                        theta=float(prob.similarity_max()), mu=mu,
+                                        num_rounds=max(budget // (4 * M + 2), 3)),
+    }
+    print(f"\n{'method':10s} {'dist^2 @ comm budget':>22s}")
+    for name, res in runs.items():
+        comm = np.asarray(res.comm)
+        idx = np.searchsorted(comm, budget) - 1
+        idx = max(min(idx, len(comm) - 1), 0)
+        print(f"{name:10s} {float(res.dist_sq[idx]):22.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Sharding-aware pytree checkpointing (npz; no external deps).
+
+Leaves are gathered to host (`jax.device_get` handles sharded arrays),
+flattened with their treedef-paths as keys, and written atomically.  Restore
+rebuilds the pytree and (optionally) re-applies a sharding tree via
+device_put.  The SVRP server state (params, anchor, anchor_grad, opt moments)
+is just a pytree, so one call checkpoints the whole training state.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+from jax.numpy import asarray as jnp_asarray
+
+PyTree = Any
+_SEP = "/"
+
+
+_BF16_TAG = "::bf16"
+_KEY_TAG = "::prngkey"
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        if hasattr(leaf, "dtype") and jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key):
+            # typed PRNG keys: persist the raw counter words
+            flat[key + _KEY_TAG] = np.asarray(jax.random.key_data(leaf))
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":  # numpy can't serialize ml_dtypes
+            key += _BF16_TAG
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)  # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for fn in os.listdir(directory)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", fn))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: PyTree, shardings: PyTree | None = None) -> PyTree:
+    """`like` supplies the treedef (and dtypes for 0-size-safe reconstruction);
+    `shardings` (same structure) re-places leaves on the mesh if given."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        new_leaves = []
+        for p, leaf in leaves_paths:
+            key = _SEP.join(_path_str(x) for x in p)
+            if key + _KEY_TAG in data:
+                new_leaves.append(jax.random.wrap_key_data(jnp_asarray(data[key + _KEY_TAG])))
+                continue
+            if key + _BF16_TAG in data:
+                import ml_dtypes
+
+                arr = data[key + _BF16_TAG].view(ml_dtypes.bfloat16)
+            else:
+                arr = data[key]
+            new_leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree

@@ -1,0 +1,53 @@
+"""Architecture registry: `get_config("<arch-id>")` / `--arch <id>`."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    deepseek_moe_16b,
+    granite_3_2b,
+    internvl2_76b,
+    llama3_2_3b,
+    qwen2_1_5b,
+    qwen3_4b,
+    qwen3_moe_235b_a22b,
+    rwkv6_1_6b,
+    seamless_m4t_large_v2,
+    zamba2_2_7b,
+)
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        internvl2_76b.CONFIG,
+        qwen2_1_5b.CONFIG,
+        granite_3_2b.CONFIG,
+        llama3_2_3b.CONFIG,
+        zamba2_2_7b.CONFIG,
+        qwen3_moe_235b_a22b.CONFIG,
+        seamless_m4t_large_v2.CONFIG,
+        rwkv6_1_6b.CONFIG,
+        qwen3_4b.CONFIG,
+        deepseek_moe_16b.CONFIG,
+    ]
+}
+
+ARCH_IDS = list(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    return REGISTRY[name]
+
+
+from repro.configs.shapes import INPUT_SHAPES, input_specs, shape_supported  # noqa: E402
+
+__all__ = [
+    "ModelConfig",
+    "REGISTRY",
+    "ARCH_IDS",
+    "get_config",
+    "INPUT_SHAPES",
+    "input_specs",
+    "shape_supported",
+]

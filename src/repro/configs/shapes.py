@@ -1,0 +1,134 @@
+"""The four assigned input shapes and ShapeDtypeStruct builders for each.
+
+  train_4k     seq_len=4096    global_batch=256   (training;   lowers train_step)
+  prefill_32k  seq_len=32768   global_batch=32    (inference;  lowers prefill_step)
+  decode_32k   seq_len=32768   global_batch=128   (inference;  lowers serve_step:
+                                                   ONE token + 32k KV cache)
+  long_500k    seq_len=524288  global_batch=1     (long-context serve_step; only
+                                                   sub-quadratic / sliding-window)
+
+`input_specs(cfg, shape)` returns the pytree of jax.ShapeDtypeStruct stand-ins
+for the corresponding step function's *data* arguments — weak-type-correct,
+shardable, zero allocation.  Decode shapes also expose `cache_specs`.
+
+Skips (see DESIGN.md §5):
+  * long_500k for seamless-m4t (enc-dec; 500k-token target-side decode is
+    meaningless for a speech translator) — `shape_supported` returns False.
+  * long_500k for dense/moe/vlm families runs via the sliding-window variant
+    (`cfg.with_sliding_window()` is applied automatically by `long_context_config`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+DEFAULT_VISION_DIM = 3200  # InternViT-6B output width (mirrors models.vlm)
+
+
+class InputShape(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+def long_context_config(cfg: ModelConfig) -> ModelConfig:
+    """The variant of `cfg` used for long_500k: attention families get a
+    sliding window so the KV working set is O(window) not O(seq)."""
+    if cfg.family in ("dense", "moe", "vlm", "hybrid") and cfg.sliding_window is None:
+        return cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(supported, reason-if-not)."""
+    if shape_name == "long_500k" and cfg.family == "audio":
+        return False, (
+            "enc-dec speech model: 524288-token target-side decode has no task "
+            "meaning (noted skip, DESIGN.md §5)"
+        )
+    return True, ""
+
+
+def resolve_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    return long_context_config(cfg) if shape_name == "long_500k" else cfg
+
+
+def _token_specs(batch: int, seq: int):
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct pytree for the step's data args.
+
+    train/prefill -> the batch dict.  decode -> {"token": (B,), "pos": ()}
+    (the cache is built by `cache_specs`)."""
+    sh = INPUT_SHAPES[shape_name]
+    cfg = resolve_config(cfg, shape_name)
+    B, S = sh.global_batch, sh.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    if sh.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            P = min(cfg.frontend_len, S // 4)
+            specs = _token_specs(B, S - P)
+            specs["patches"] = jax.ShapeDtypeStruct((B, P, DEFAULT_VISION_DIM), cdt)
+            return specs
+        if cfg.family == "audio":
+            F = max(S // 4, 16)
+            specs = _token_specs(B, S)
+            specs["frames"] = jax.ShapeDtypeStruct((B, F, cfg.d_model), cdt)
+            return specs
+        return _token_specs(B, S)
+
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str, cache_dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode cache (zero allocation), derived by
+    eval_shape over the family's cache initializer."""
+    from repro.models import model as M
+
+    sh = INPUT_SHAPES[shape_name]
+    cfg = resolve_config(cfg, shape_name)
+    assert sh.kind == "decode"
+    B, S = sh.global_batch, sh.seq_len
+
+    if cfg.family == "audio":
+        F = max(min(S, 32768) // 4, 16)
+        frames = jax.ShapeDtypeStruct((B, F, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+
+        def mk(params, frames):
+            return M.init_decode_cache(
+                cfg, B, S, dtype=cache_dtype, params=params, batch={"frames": frames}
+            )
+
+        # params needed: build param *specs* via eval_shape too
+        from repro.models.model import init_params
+
+        pspec = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+        return jax.eval_shape(mk, pspec, frames)
+
+    return jax.eval_shape(lambda: M.init_decode_cache(cfg, B, S, dtype=cache_dtype))

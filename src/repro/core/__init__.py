@@ -1,0 +1,94 @@
+"""The paper's contribution: SVRP and Catalyzed SVRP (Khaled & Jin, ICLR 2023).
+
+`run_*` functions are the paper-faithful algorithms (exact communication
+accounting, client sampling).  `deep_*` is the pod-scale pytree adaptation used
+to federate the architecture zoo (see DESIGN.md §4 for recorded deviations).
+"""
+from repro.core.types import RunResult
+from repro.core.prox import prox_gd, prox_agd, gd_steps_for_accuracy
+from repro.core.sppm import (
+    run_sppm,
+    theorem1_iterations,
+    theorem1_stepsize,
+    theorem1_prox_accuracy,
+)
+from repro.core.svrp import (
+    run_svrp,
+    theorem2_stepsize,
+    theorem2_rate,
+    theorem2_iterations,
+)
+from repro.core.catalyst import (
+    run_catalyst,
+    run_catalyzed_svrp,
+    theorem3_gamma,
+    catalyst_inner_iterations,
+)
+from repro.core.baselines import (
+    run_sgd,
+    run_svrg,
+    run_scaffold,
+    run_dane,
+    run_acc_extragradient,
+)
+from repro.core.composite import (
+    run_composite_svrp,
+    composite_minimizer_pgd,
+    prox_l1,
+    prox_box,
+    prox_l2ball,
+)
+from repro.core.minibatch import run_svrp_minibatch
+from repro.core.similarity import empirical_delta, empirical_smoothness, grad_noise_at
+from repro.core.deep import (
+    DeepSVRPConfig,
+    DeepSVRPState,
+    deep_svrp_init,
+    deep_svrp_round,
+    FedAvgState,
+    fedavg_round,
+    DeepScaffoldState,
+    deep_scaffold_init,
+    deep_scaffold_round,
+)
+
+__all__ = [
+    "RunResult",
+    "prox_gd",
+    "prox_agd",
+    "gd_steps_for_accuracy",
+    "run_sppm",
+    "theorem1_iterations",
+    "theorem1_stepsize",
+    "theorem1_prox_accuracy",
+    "run_svrp",
+    "theorem2_stepsize",
+    "theorem2_rate",
+    "theorem2_iterations",
+    "run_catalyzed_svrp",
+    "theorem3_gamma",
+    "catalyst_inner_iterations",
+    "run_sgd",
+    "run_svrg",
+    "run_scaffold",
+    "run_dane",
+    "run_acc_extragradient",
+    "run_svrp_minibatch",
+    "run_composite_svrp",
+    "composite_minimizer_pgd",
+    "prox_l1",
+    "prox_box",
+    "prox_l2ball",
+    "empirical_delta",
+    "empirical_smoothness",
+    "grad_noise_at",
+    "DeepSVRPConfig",
+    "DeepSVRPState",
+    "deep_svrp_init",
+    "deep_svrp_round",
+    "FedAvgState",
+    "fedavg_round",
+    "DeepScaffoldState",
+    "deep_scaffold_init",
+    "deep_scaffold_round",
+]

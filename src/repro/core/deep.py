@@ -1,0 +1,214 @@
+"""DeepSVRP: the paper's algorithm adapted to pytree models on a pod.
+
+This is the *systems* form of SVRP used to federate the architecture zoo
+(`repro/models`).  Each data-axis cohort of the mesh is one client; a round is:
+
+  1. control variate     g^m = gbar - grad f_m(w)          (local)
+  2. prox target         z^m = x - eta g^m                 (local)
+  3. K prox-GD steps     y <- y - beta (grad f_m(y) + (y - z^m)/eta)
+                                                           (local, Algorithm 7)
+  4. aggregate           x' = mean_m y^m                   (1 all-reduce)
+  5. anchor refresh      w.p. p:  w <- x', gbar <- mean_m grad f_m(w)
+                                                           (1 gated all-reduce)
+
+Deviations from the convex theory, recorded in DESIGN.md §4: all cohorts step
+concurrently (datacenter utilization) and the refreshed anchor gradient is a
+minibatch estimate (full gradients are not available for deep models).  The
+collective *schedule* — cheap local rounds, rare anchor synchronization — is
+exactly the paper's communication pattern.
+
+All functions are pure and cohort-local: `axis_name=None` runs the single
+-process form (used by tests and the CPU examples); inside `shard_map` over
+('data',) or ('pod','data') the pmean/psum become real ICI collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import (
+    tree_add,
+    tree_axpy,
+    tree_scale,
+    tree_sub,
+    tree_where,
+    tree_zeros_like,
+)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepSVRPConfig:
+    eta: float = 0.5  # server prox stepsize (theory: mu/(2 delta^2))
+    local_lr: float = 0.05  # Algorithm 7's beta
+    local_steps: int = 4  # K inner prox-GD steps per round
+    anchor_prob: float = 0.1  # p — Bernoulli anchor-refresh probability
+    # "exact":       paper-faithful — the refreshed anchor gradient is
+    #                evaluated at the aggregated new iterate x' (one extra
+    #                grad pass + one extra server-state all-gather per round).
+    # "reuse_local": beyond-paper — reuse the gradient at each cohort's last
+    #                local iterate y_{K-1} (already computed inside the prox
+    #                loop) as the anchor-gradient estimate. Eliminates 1 of
+    #                the K+2 grad passes AND the x' all-gather; the estimate
+    #                is biased by ||y_{K-1} - x'|| = O(local drift), the same
+    #                order as the minibatch noise already present in the
+    #                anchor gradient.  See EXPERIMENTS.md §Perf iteration 2.
+    refresh_grad_mode: str = "exact"
+
+
+class DeepSVRPState(NamedTuple):
+    params: PyTree  # x_k (server iterate)
+    anchor: PyTree  # w_k
+    anchor_grad: PyTree  # gbar = grad f(w_k), cohort-averaged at refresh
+    step: jax.Array
+    rng: jax.Array
+
+
+def _maybe_pmean(tree: PyTree, axis_names) -> PyTree:
+    if not axis_names:
+        return tree
+    for ax in axis_names:
+        tree = jax.lax.pmean(tree, ax)
+    return tree
+
+
+def deep_svrp_init(params: PyTree, grad0: PyTree, rng: jax.Array) -> DeepSVRPState:
+    """grad0 should be the cohort-averaged gradient at params (one all-reduce)."""
+    return DeepSVRPState(
+        params=params,
+        anchor=params,
+        anchor_grad=grad0,
+        step=jnp.zeros((), jnp.int32),
+        rng=rng,
+    )
+
+
+def deep_svrp_round(
+    loss_fn: Callable[[PyTree, Any], jax.Array],
+    state: DeepSVRPState,
+    batch: Any,
+    cfg: DeepSVRPConfig,
+    axis_names: Sequence[str] = (),
+) -> tuple[DeepSVRPState, jax.Array]:
+    """One SVRP round.  `loss_fn(params, batch)` is the COHORT-LOCAL loss;
+    `batch` is the cohort's shard.  Returns (new_state, local loss at x)."""
+    grad_fn = jax.grad(loss_fn)
+
+    # (1) control variate from the anchor.
+    g_anchor_local = grad_fn(state.anchor, batch)
+    g_k = tree_sub(state.anchor_grad, g_anchor_local)
+
+    # (2) prox target z = x - eta g_k.
+    z = tree_axpy(-cfg.eta, g_k, state.params)
+
+    # (3) K local prox-GD steps on  f_m(y) + ||y - z||^2/(2 eta)  (Algorithm 7).
+    def local_step(y, _):
+        g = grad_fn(y, batch)
+        prox_pull = tree_scale(tree_sub(y, z), 1.0 / cfg.eta)
+        update = tree_add(g, prox_pull)
+        return tree_axpy(-cfg.local_lr, update, y), None
+
+    y, _ = jax.lax.scan(local_step, state.params, None, length=cfg.local_steps)
+
+    # (4) server aggregation — the per-round 2-step communication.
+    x_next = _maybe_pmean(y, axis_names)
+
+    # (5) Bernoulli anchor refresh — the paper's rare 3pM communication.
+    #     The coin is derived from the (replicated) step counter so every cohort
+    #     flips the same coin without extra communication.
+    coin_key = jax.random.fold_in(state.rng, state.step)
+    refresh = jax.random.bernoulli(coin_key, cfg.anchor_prob)
+
+    anchor_next = tree_where(refresh, x_next, state.anchor)
+    g_new_local = grad_fn(anchor_next, batch)
+    g_new = _maybe_pmean(g_new_local, axis_names)
+    anchor_grad_next = tree_where(refresh, g_new, state.anchor_grad)
+
+    loss_val = loss_fn(state.params, batch)
+    new_state = DeepSVRPState(
+        params=x_next,
+        anchor=anchor_next,
+        anchor_grad=anchor_grad_next,
+        step=state.step + 1,
+        rng=state.rng,
+    )
+    return new_state, loss_val
+
+
+# ----------------------------------------------------------------- baselines
+class FedAvgState(NamedTuple):
+    params: PyTree
+    step: jax.Array
+
+
+def fedavg_round(
+    loss_fn: Callable[[PyTree, Any], jax.Array],
+    state: FedAvgState,
+    batch: Any,
+    *,
+    local_lr: float,
+    local_steps: int,
+    axis_names: Sequence[str] = (),
+) -> tuple[FedAvgState, jax.Array]:
+    """FedAvg/Local-SGD: K local SGD steps then average — the standard baseline."""
+    grad_fn = jax.grad(loss_fn)
+
+    def local_step(y, _):
+        return tree_axpy(-local_lr, grad_fn(y, batch), y), None
+
+    y, _ = jax.lax.scan(local_step, state.params, None, length=local_steps)
+    x_next = _maybe_pmean(y, axis_names)
+    loss_val = loss_fn(state.params, batch)
+    return FedAvgState(params=x_next, step=state.step + 1), loss_val
+
+
+class DeepScaffoldState(NamedTuple):
+    params: PyTree
+    c_local: PyTree  # this cohort's control variate
+    c_global: PyTree  # server control variate (cohort-average of c_local)
+    step: jax.Array
+
+
+def deep_scaffold_init(params: PyTree) -> DeepScaffoldState:
+    return DeepScaffoldState(
+        params=params,
+        c_local=tree_zeros_like(params),
+        c_global=tree_zeros_like(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def deep_scaffold_round(
+    loss_fn: Callable[[PyTree, Any], jax.Array],
+    state: DeepScaffoldState,
+    batch: Any,
+    *,
+    local_lr: float,
+    local_steps: int,
+    axis_names: Sequence[str] = (),
+) -> tuple[DeepScaffoldState, jax.Array]:
+    """SCAFFOLD with full cohort participation (Option II control variates)."""
+    grad_fn = jax.grad(loss_fn)
+
+    def local_step(y, _):
+        g = grad_fn(y, batch)
+        corr = tree_sub(state.c_global, state.c_local)
+        return tree_axpy(-local_lr, tree_add(g, corr), y), None
+
+    y, _ = jax.lax.scan(local_step, state.params, None, length=local_steps)
+
+    # c_m^+ = c_m - c + (x - y)/(K * lr)
+    drift = tree_scale(tree_sub(state.params, y), 1.0 / (local_steps * local_lr))
+    c_local_next = tree_add(tree_sub(state.c_local, state.c_global), drift)
+
+    x_next = _maybe_pmean(y, axis_names)
+    c_global_next = _maybe_pmean(c_local_next, axis_names)
+    loss_val = loss_fn(state.params, batch)
+    return (
+        DeepScaffoldState(x_next, c_local_next, c_global_next, state.step + 1),
+        loss_val,
+    )

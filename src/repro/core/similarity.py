@@ -1,0 +1,68 @@
+"""Estimators for the constants of Assumptions 1-2 (delta, mu, L, sigma_*).
+
+For quadratics the exact values come from `QuadraticProblem`; these estimators
+are the *measurement* tools the paper uses for real data ("we measure
+L ~= 6.33, delta ~= 0.22") and that the pod runtime uses to pick eta for deep
+models, where only sampled gradient differences are available.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def empirical_delta(problem, key: jax.Array, num_pairs: int = 64, radius: float = 1.0) -> jax.Array:
+    """Monte-Carlo lower estimate of delta from Assumption 1's defining ratio:
+
+        delta(x, y)^2 = (1/M) sum_m ||D_m(x) - D_m(y)||^2 / ||x - y||^2,
+        D_m(x) = grad f_m(x) - grad f(x),
+
+    maximized over sampled pairs (x, y).  A lower bound on the true sup, but
+    tight in practice for smooth objectives when pairs are spread.
+    """
+    M = problem.num_clients
+    d = problem.dim
+    ms = jnp.arange(M)
+
+    def pair_ratio(k):
+        kx, ky = jax.random.split(k)
+        x = radius * jax.random.normal(kx, (d,), dtype=jnp.result_type(0.0))
+        y = radius * jax.random.normal(ky, (d,), dtype=jnp.result_type(0.0))
+        gx_bar = problem.full_grad(x)
+        gy_bar = problem.full_grad(y)
+
+        def dev(m):
+            return jnp.sum(
+                (problem.grad(m, x) - gx_bar - (problem.grad(m, y) - gy_bar)) ** 2
+            )
+
+        num = jnp.mean(jax.vmap(dev)(ms))
+        return num / jnp.sum((x - y) ** 2)
+
+    keys = jax.random.split(key, num_pairs)
+    ratios = jax.vmap(pair_ratio)(keys)
+    return jnp.sqrt(jnp.max(ratios))
+
+
+def empirical_smoothness(problem, key: jax.Array, num_pairs: int = 64, radius: float = 1.0) -> jax.Array:
+    """Monte-Carlo estimate of L for the average objective f."""
+    d = problem.dim
+
+    def pair_ratio(k):
+        kx, ky = jax.random.split(k)
+        x = radius * jax.random.normal(kx, (d,), dtype=jnp.result_type(0.0))
+        y = radius * jax.random.normal(ky, (d,), dtype=jnp.result_type(0.0))
+        return jnp.sqrt(
+            jnp.sum((problem.full_grad(x) - problem.full_grad(y)) ** 2)
+            / jnp.sum((x - y) ** 2)
+        )
+
+    keys = jax.random.split(key, num_pairs)
+    return jnp.max(jax.vmap(pair_ratio)(keys))
+
+
+def grad_noise_at(problem, x: jax.Array) -> jax.Array:
+    """sigma^2(x) = (1/M) sum_m ||grad f_m(x)||^2 (Theorem 1's sigma_*^2 at x_*)."""
+    ms = jnp.arange(problem.num_clients)
+    sq = jax.vmap(lambda m: jnp.sum(problem.grad(m, x) ** 2))(ms)
+    return jnp.mean(sq)

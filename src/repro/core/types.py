@@ -1,0 +1,30 @@
+"""Shared result/accounting types for the paper-faithful algorithm layer."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+
+
+class RunResult(NamedTuple):
+    """Trajectory of a federated optimization run.
+
+    Communication accounting follows the paper exactly: one communication step
+    = one vector exchanged between the server and a single client (Section 5).
+    """
+
+    dist_sq: jax.Array  # (K,) squared distance to x_star after each iteration
+    comm: jax.Array  # (K,) cumulative communication steps after each iteration
+    x_final: jax.Array  # final iterate
+
+    def comm_to_accuracy(self, eps: float) -> jax.Array:
+        """First cumulative-communication count at which dist_sq <= eps.
+
+        Returns +inf if the run never reached eps (caller decides how to treat).
+        """
+        import jax.numpy as jnp
+
+        hit = self.dist_sq <= eps
+        idx = jnp.argmax(hit)  # first True, or 0 if none
+        reached = jnp.any(hit)
+        return jnp.where(reached, self.comm[idx], jnp.inf)

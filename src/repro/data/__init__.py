@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticLMDataset, client_partition
+from repro.data.pipeline import ShardedBatcher
+
+__all__ = ["SyntheticLMDataset", "client_partition", "ShardedBatcher"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Layout per the brief: one module per kernel (`pl.pallas_call` + explicit
+BlockSpec VMEM tiling), `ops.py` jit'd dispatch wrappers (pure-jnp chunked
+fast paths by default; Pallas via `ops.use_pallas(True)` / REPRO_USE_PALLAS=1,
+validated with interpret=True on CPU), `ref.py` naive oracles.
+
+Kernels: flash_attention (train/prefill), decode_attention (flash-decode),
+rwkv6_scan, ssm_scan (Mamba-2 SSD form), prox_update (the paper's
+Algorithm-7 fused local step).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,71 @@
+"""Chunked (SSD-style) Mamba-2 scan in pure jnp.
+
+Mathematically identical to `ref.ssm_scan` but O(T/Q) sequential steps with
+O(Q^2) intra-chunk parallel work — the standard chunked decomposition
+(Dao & Gu, 2024) and the blueprint for the Pallas kernel:
+
+  within a chunk (size Q), with a_t = A*dt_t and cum[t] = sum_{s<=t} a_s:
+    y_intra[t] = sum_{s<=t} exp(cum[t]-cum[s]) * dt_s (B_s . C_t) x_s
+    y_inter[t] = C_t . (exp(cum[t]) h_in)
+    h_out      = exp(cum[Q]) h_in + sum_s exp(cum[Q]-cum[s]) dt_s x_s (x) B_s
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_chunked(x, dt, A, B_mat, C_mat, D, state0=None, chunk: int = 128):
+    """Same contract as ref.ssm_scan. x: (B,T,H,P); dt: (B,T,H);
+    A: (H,); B_mat, C_mat: (B,T,N); D: (H,). Returns (y, final_state)."""
+    Bb, T, H, P = x.shape
+    N = B_mat.shape[-1]
+    f32 = jnp.float32
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+
+    x_ = x.astype(f32).reshape(Bb, nc, Q, H, P)
+    dt_ = dt.astype(f32).reshape(Bb, nc, Q, H)
+    Bm = B_mat.astype(f32).reshape(Bb, nc, Q, N)
+    Cm = C_mat.astype(f32).reshape(Bb, nc, Q, N)
+    A_ = A.astype(f32)
+    D_ = D.astype(f32)
+
+    h0 = jnp.zeros((Bb, H, P, N), f32) if state0 is None else state0.astype(f32)
+
+    def chunk_step(h, inp):
+        xq, dtq, Bq, Cq = inp  # (B,Q,H,P),(B,Q,H),(B,Q,N),(B,Q,N)
+        a = A_[None, None, :] * dtq  # (B,Q,H)
+        cum = jnp.cumsum(a, axis=1)  # inclusive cumsum
+        # intra-chunk "attention": L[t,s] = exp(cum[t]-cum[s]) for s<=t
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        # zero masked entries BEFORE exp: for s > t, diff > 0 (cum decreasing)
+        # and exp(diff) can overflow to inf, poisoning gradients through where.
+        diff = jnp.where(tri, diff, 0.0)
+        L = jnp.where(tri, jnp.exp(diff), 0.0)
+        BC = jnp.einsum("bsn,btn->bts", Bq, Cq)  # (B,Q_t,Q_s)
+        W = L * BC[..., None]  # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bsh,bshp->bthp", W, dtq, xq)
+        # inter-chunk: read decayed incoming state
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", Cq, h, jnp.exp(cum))
+        y = y_intra + y_inter + D_[None, None, :, None] * xq
+        # state update
+        tot = cum[:, -1:, :]  # (B,1,H)
+        w_out = jnp.exp(tot - cum) * dtq  # (B,Q,H)
+        h_next = jnp.exp(tot[:, 0])[:, :, None, None] * h + jnp.einsum(
+            "bsh,bshp,bsn->bhpn", w_out, xq, Bq
+        )
+        return h_next, y
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (x_, dt_, Bm, Cm))
+    h_fin, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, Tp, H, P)[:, :T]
+    return y.astype(x.dtype), h_fin

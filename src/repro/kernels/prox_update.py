@@ -1,0 +1,68 @@
+"""Fused SVRP local prox-GD step — Pallas TPU kernel.
+
+The inner loop of the paper's Algorithm 7 as executed on every cohort each
+round:  y <- y - lr * (g + (y - z) * inv_eta).
+
+Unfused this is 3 HBM reads + 2 intermediate writes + 1 output write per
+element; fused it is 3 reads + 1 write — a pure memory-bandwidth op whose
+roofline is exactly (4 * bytes)/(HBM bw).  Blocks are (8, 128)-aligned VPU
+tiles streamed from HBM through VMEM.
+
+Validated in interpret mode against ref.prox_update.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+_ROWS = 256  # (256, 128) f32 blocks = 128 KiB per operand in VMEM
+
+
+def _prox_kernel(y_ref, g_ref, z_ref, s_ref, o_ref):
+    y = y_ref[...]
+    g = g_ref[...]
+    z = z_ref[...]
+    lr = s_ref[0, 0]
+    inv_eta = s_ref[0, 1]
+    o_ref[...] = y - lr * (g + (y - z) * inv_eta)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prox_update(y, g, z, local_lr, inv_eta, *, interpret: bool = True):
+    """Leaf-wise fused update; any shape/dtype (flattened to (rows, 128))."""
+    shape, dtype = y.shape, y.dtype
+    n = y.size
+    cols = _LANES
+    rows_total = -(-n // cols)
+    pad = rows_total * cols - n
+    block_rows = min(_ROWS, rows_total)
+    rpad = (-rows_total) % block_rows
+
+    def prep(a):
+        a = a.reshape(-1)
+        if pad:
+            a = jnp.pad(a, (0, pad))
+        a = a.reshape(rows_total, cols)
+        if rpad:
+            a = jnp.pad(a, ((0, rpad), (0, 0)))
+        return a
+
+    yp, gp, zp = prep(y), prep(g), prep(z)
+    scalars = jnp.stack(
+        [jnp.asarray(local_lr, dtype), jnp.asarray(inv_eta, dtype)]
+    ).reshape(1, 2)
+    grid = ((rows_total + rpad) // block_rows,)
+    out = pl.pallas_call(
+        _prox_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))] * 3
+        + [pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(yp.shape, dtype),
+        interpret=interpret,
+    )(yp, gp, zp, scalars)
+    return out[:rows_total].reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the *definitions of correctness*: simple, obviously-right
+implementations with no tiling, used by tests to validate both the chunked
+jnp fast paths in `ops.py` and the Pallas kernels (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Skv, KVH, Dh)
+    v: jax.Array,  # (B, Skv, KVH, Dh)
+    *,
+    causal: bool = True,
+    sliding_window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Full-softmax GQA attention, O(S^2) memory. Oracle only."""
+    B, Sq, H, Dh = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) / jnp.sqrt(Dh)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if sliding_window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < sliding_window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    # Guard fully-masked rows (can happen only with misuse; keep NaN-free).
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def naive_decode_attention(q, k_cache, v_cache, valid):
+    """q: (B,1,H,Dh); caches (B,S,KVH,Dh); valid: (S,) bool mask."""
+    B, _, H, Dh = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, Dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32)) / jnp.sqrt(Dh)
+    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def rwkv6_scan(r, k, v, w, u, state0=None):
+    """RWKV-6 (Finch) WKV recurrence with data-dependent decay.  Oracle.
+
+    Shapes: r,k,w: (B, T, H, K); v: (B, T, H, V); u: (H, K).
+    State S: (B, H, K, V);  per step t:
+
+        y_t = (S + u * k_t ⊗ v_t)^T r_t      (read with bonus for current token)
+        S   = diag(w_t) S + k_t ⊗ v_t        (decay then write)
+
+    w is the *decay factor* in (0,1) (callers pass exp(-exp(w_raw))).
+    Returns (y: (B,T,H,V), final state).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    r_, k_, v_, w_ = (a.astype(f32) for a in (r, k, v, w))
+    u_ = u.astype(f32)
+    S0 = jnp.zeros((B, H, K, V), f32) if state0 is None else state0.astype(f32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        y = jnp.einsum("bhkv,bhk->bhv", S + u_[None, :, :, None] * kv, rt)
+        S_next = wt[..., :, None] * S + kv
+        return S_next, y
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (r_, k_, v_, w_))
+    S_fin, ys = jax.lax.scan(step, S0, inputs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S_fin
+
+
+def ssm_scan(x, dt, A, B_mat, C_mat, D, state0=None):
+    """Mamba-2 style selective state-space scan (scalar decay per head). Oracle.
+
+    Shapes: x: (B, T, H, P)   — inner activations, P = head dim
+            dt: (B, T, H)     — positive step sizes (post-softplus)
+            A: (H,)           — negative scalars
+            B_mat, C_mat: (B, T, N) — input/output projections, N = state dim
+            D: (H,)           — skip connection
+    State h: (B, H, P, N); per step:
+        h   = exp(A dt) h + dt * x_t ⊗ B_t
+        y_t = h C_t + D x_t
+    Returns (y: (B,T,H,P), final state).
+    """
+    Bb, T, H, P = x.shape
+    N = B_mat.shape[-1]
+    f32 = jnp.float32
+    x_, dt_, B_, C_ = (a.astype(f32) for a in (x, dt, B_mat, C_mat))
+    A_ = A.astype(f32)
+    D_ = D.astype(f32)
+    h0 = jnp.zeros((Bb, H, P, N), f32) if state0 is None else state0.astype(f32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(A_[None] * dtt)  # (B,H)
+        upd = (dtt[..., None] * xt)[..., None] * Bt[:, None, None, :]  # (B,H,P,N)
+        h_next = decay[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_next, Ct) + D_[None, :, None] * xt
+        return h_next, y
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (x_, dt_, B_, C_))
+    h_fin, ys = jax.lax.scan(step, h0, inputs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin
+
+
+def prox_update(y, g, z, local_lr, inv_eta):
+    """Fused SVRP local prox-GD step (the paper's Algorithm 7 inner update):
+
+        y <- y - local_lr * (g + (y - z) * inv_eta)
+
+    Elementwise; the Pallas version fuses the three reads + one write.
+    """
+    return y - local_lr * (g + (y - z) * inv_eta)

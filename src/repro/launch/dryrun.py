@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+_DOC = """Multi-pod dry-run: prove every (architecture x input-shape x mesh) lowers
+and compiles against the production mesh, and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all                  # 16x16
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod      # 2x16x16
+
+Per combo this lowers the right step (train_4k -> SVRP federated train_step;
+prefill_32k -> prefill_step; decode shapes -> serve_step), compiles it,
+prints memory_analysis() (proves the memory budget) and cost_analysis()
+(FLOPs/bytes for §Roofline), scans the HLO for the collective schedule, and
+writes a JSON record under experiments/dryrun/.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs.shapes import cache_specs, input_specs, resolve_config, shape_supported
+from repro.core.deep import DeepSVRPConfig
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    make_adamw_train_step,
+    make_prefill_step,
+    make_serve_step,
+    make_svrp_train_step,
+)
+
+DEFAULT_SVRP = DeepSVRPConfig(eta=0.5, local_lr=0.05, local_steps=2, anchor_prob=0.0625)
+
+
+def lower_combo(arch: str, shape: str, *, multi_pod: bool = False, train_mode: str = "svrp",
+                svrp: DeepSVRPConfig = DEFAULT_SVRP):
+    """Returns (lowered, compiled, meta). Raises on any sharding/compile bug."""
+    base_cfg = get_config(arch)
+    cfg = resolve_config(base_cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    sh = INPUT_SHAPES[shape]
+    specs = input_specs(base_cfg, shape)
+
+    t0 = time.time()
+    if sh.kind == "train":
+        if train_mode == "svrp":
+            make_step, helpers = make_svrp_train_step(cfg, mesh, svrp)
+            state_spec = jax.eval_shape(helpers["init_state"], jax.random.key(0))
+            step = make_step(specs)
+            lowered = step.lower(state_spec, specs)
+        else:
+            make_step, helpers = make_adamw_train_step(cfg, mesh)
+            state_spec = jax.eval_shape(helpers["init_state"], jax.random.key(0))
+            step = make_step(specs)
+            lowered = step.lower(state_spec, specs)
+    elif sh.kind == "prefill":
+        make_step, helpers = make_prefill_step(cfg, mesh)
+        pshape = helpers["param_shapes"]
+        step = make_step(specs)
+        lowered = step.lower(pshape, specs)
+    else:  # decode
+        make_step, helpers = make_serve_step(cfg, mesh)
+        pshape = helpers["param_shapes"]
+        cshape = cache_specs(base_cfg, shape)
+        step = make_step(cshape, specs["token"])
+        lowered = step.lower(pshape, cshape, specs["token"], specs["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    meta = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": sh.kind,
+        "train_mode": train_mode if sh.kind == "train" else None,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    return lowered, compiled, meta
+
+
+def run_combo(arch: str, shape: str, *, multi_pod: bool, out_dir: str, train_mode: str = "svrp",
+              svrp: DeepSVRPConfig = DEFAULT_SVRP, verbose: bool = True) -> dict:
+    base_cfg = get_config(arch)
+    ok, reason = shape_supported(base_cfg, shape)
+    record: dict = {"arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        _write(record, out_dir)
+        if verbose:
+            print(f"[skip] {arch} x {shape}: {reason}")
+        return record
+
+    try:
+        lowered, compiled, meta = lower_combo(
+            arch, shape, multi_pod=multi_pod, train_mode=train_mode, svrp=svrp
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        record.update(status="FAILED", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        _write(record, out_dir)
+        if verbose:
+            print(f"[FAIL] {arch} x {shape}: {e}")
+        return record
+
+    mem = compiled.memory_analysis()
+    cfg_r = resolve_config(base_cfg, shape)
+    roof = rl.analyze(
+        compiled,
+        meta["chips"],
+        cfg=cfg_r,
+        shape_name=shape,
+        kind=meta["kind"],
+        train_mode=train_mode,
+        local_steps=svrp.local_steps,
+        refresh_exact=svrp.refresh_grad_mode == "exact",
+    )
+    mf = rl.model_flops(cfg_r, shape)
+    record.update(
+        status="ok",
+        **meta,
+        memory={
+            # all PER-DEVICE (calibrated; see EXPERIMENTS.md §Dry-run).
+            # `argument` = resident state (weights/optimizer/cache shards) — the
+            # hard HBM floor; `peak` = XLA's liveness-based peak; `temp` = the
+            # no-reuse sum of temporaries (upper bound, CPU-backend pessimistic).
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        roofline=roof.as_dict(),
+        model_flops=mf,
+        useful_flops_ratio=(mf / roof.flops if roof.flops else None),
+    )
+    _write(record, out_dir)
+    if verbose:
+        m = record["memory"]
+        print(
+            f"[ok]   {arch} x {shape} ({record['mesh']}): "
+            f"lower {meta['lower_s']}s compile {meta['compile_s']}s | "
+            f"args/dev {(m['argument_bytes'] or 0)/2**30:.2f} GiB "
+            f"temp/dev {(m['temp_bytes'] or 0)/2**30:.2f} GiB | "
+            f"compute {roof.compute_s*1e3:.2f}ms mem {roof.memory_s*1e3:.2f}ms "
+            f"coll {roof.collective_s*1e3:.2f}ms -> {roof.dominant} | "
+            f"useful {100*record['useful_flops_ratio']:.0f}%"
+        )
+    return record
+
+
+def _write(record: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    fn = f"{record['arch']}_{record['shape']}_{record['mesh'].replace('x','-')}.json"
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--train-mode", default="svrp", choices=["svrp", "adamw"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    combos = (
+        [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    n_fail = 0
+    for arch, shape in combos:
+        rec = run_combo(arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
+                        train_mode=args.train_mode)
+        n_fail += rec["status"] == "FAILED"
+    if n_fail:
+        raise SystemExit(f"{n_fail} combos FAILED")
+
+
+if __name__ == "__main__":
+    main()

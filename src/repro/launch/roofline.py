@@ -1,0 +1,374 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per the brief (TPU v5e constants):
+  compute term    = FLOPs      / (chips * 197e12 FLOP/s)     [bf16 peak]
+  memory term     = HBM_bytes  / (chips * 819e9  B/s)        [HBM]
+  collective term = coll_bytes / (chips * 50e9   B/s/link)   [ICI]
+
+CAVEAT discovered during calibration (see EXPERIMENTS.md §Roofline):
+`compiled.cost_analysis()` counts while-loop *bodies once*, ignoring trip
+count — and every model here scans over layers, so raw XLA numbers
+undercount by ~L x.  We therefore:
+
+  * COLLECTIVES: parse the optimized HLO into computations, build the
+    call graph (while/cond/body/calls/to_apply/branches), infer each while's
+    trip count from the s32 constant in its condition computation, and weight
+    each collective's output bytes by the product of enclosing trip counts.
+  * COMPUTE/MEMORY: use an analytic per-(family x step) cost model
+    (`analytic_cost`, formulas documented inline) — exact for matmul-dominated
+    programs — and report the raw (loop-unaware) XLA numbers alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link / chip
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_REF_RE = re.compile(r"(body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"[su](?:32|64)\[\]\s+constant\((\d+)\)")
+_COLL_LINE = re.compile(
+    r"=\s*(\(?[^=]*?)\s+(" + "|".join(_COLL_OPS) + r")\("
+)
+
+
+def _shape_bytes_of(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_computations(txt: str):
+    """-> (blocks: name -> [lines], entry_name)."""
+    blocks: dict[str, list[str]] = {}
+    entry = None
+    current = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                current = m.group(2)
+                blocks[current] = []
+                if m.group(1):
+                    entry = current
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        blocks[current].append(stripped)
+    return blocks, entry
+
+
+def _while_trip(cond_lines: list[str]) -> int:
+    """Trip count of a while whose condition is `i < N`: the N appears as an
+    s32 constant inside the condition computation.  Heuristic: max constant."""
+    consts = [int(m.group(1)) for line in cond_lines for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(txt: str) -> dict[str, float]:
+    """How many times each computation executes per program invocation."""
+    blocks, entry = parse_computations(txt)
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if name not in blocks or depth > 50:
+            return
+        mult[name] += m
+        for line in blocks[name]:
+            # whiles: body/cond scaled by the trip count
+            if " while(" in line:
+                refs = dict((k, v) for k, v in _REF_RE.findall(line))
+                cond = refs.get("condition")
+                body = refs.get("body")
+                trip = _while_trip(blocks.get(cond, [])) if cond else 1
+                if body:
+                    visit(body, m * trip, depth + 1)
+                if cond:
+                    visit(cond, m * (trip + 1), depth + 1)
+                continue
+            for kind, ref in _REF_RE.findall(line):
+                if kind in ("calls", "to_apply"):
+                    visit(ref, m, depth + 1)
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    visit(b.strip().lstrip("%"), m, depth + 1)
+
+    if entry is None:
+        return {}
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+# Per-device wire-traffic weight per output byte, ring algorithms:
+#   all-reduce = reduce-scatter + all-gather over the full buffer ~ 2x
+#   all-gather / reduce-scatter / all-to-all / permute ~ 1x
+_OP_TRAFFIC_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def collective_stats(txt: str):
+    """(wire bytes_per_device by op kind, counts by op kind), loop-weighted."""
+    blocks, entry = parse_computations(txt)
+    mults = computation_multipliers(txt)
+    bytes_by: dict[str, float] = defaultdict(float)
+    counts: dict[str, float] = defaultdict(float)
+    for name, lines in blocks.items():
+        m = mults.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for line in lines:
+            cm = _COLL_LINE.search(line)
+            if not cm:
+                continue
+            out_shapes, op = cm.groups()
+            bytes_by[op] += m * _shape_bytes_of(out_shapes) * _OP_TRAFFIC_WEIGHT[op]
+            counts[op] += m
+    return dict(bytes_by), dict(counts)
+
+
+# --------------------------------------------------------------------------
+#  Analytic compute/memory model
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class StepCost:
+    flops: float  # total, all devices
+    hbm_bytes: float  # total, all devices
+    detail: dict
+
+
+def _fwd_cost(cfg, tokens: float, batch: float, seq_q: float, ctx_avg: float) -> tuple[float, float, dict]:
+    """One forward pass: (flops, hbm_bytes, detail).
+
+    matmul flops = 2 * N_mm * tokens, N_mm = active params minus the embedding
+    table (a gather, not a matmul; the lm head IS counted).
+    attention flops per layer = 4 * batch * H * seq_q * ctx_avg * head_dim
+    (QK^T and PV, multiply+add).  scan families add their recurrence flops.
+    HBM bytes = weight traffic (active weights read once per pass) +
+    activation traffic (c_act * tokens * d_model * L * dtype; c_act ~= 12
+    covers x, q/k/v, attn out, gate/up/down intermediates) + logits.
+    """
+    dt = 2 if cfg.compute_dtype == "bfloat16" else 4
+    pdt = 2 if cfg.param_dtype == "bfloat16" else 4
+    n_active = cfg.active_param_count()
+    n_mm = max(n_active - cfg.vocab_size * cfg.d_model, 0)
+    mm_flops = 2.0 * n_mm * tokens
+
+    attn_flops = 0.0
+    L_attn = 0
+    if cfg.family in ("dense", "moe", "vlm"):
+        L_attn = cfg.num_layers
+    elif cfg.family == "hybrid":
+        L_attn = cfg.num_layers // cfg.attn_every
+    elif cfg.family == "audio":
+        # encoder self (F x F) + decoder self + cross handled by caller via
+        # ctx_avg on the decoder; encoder added here:
+        F = max(int(seq_q) // 4, 16) if seq_q > 1 else cfg.frontend_len
+        attn_flops += 4.0 * batch * cfg.num_heads * F * F * cfg.head_dim * cfg.encoder_layers
+        L_attn = 2 * cfg.num_layers  # self + cross
+    attn_flops += 4.0 * batch * cfg.num_heads * seq_q * ctx_avg * cfg.head_dim * L_attn
+
+    scan_flops = 0.0
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        n_mamba = cfg.num_layers - cfg.num_layers // cfg.attn_every
+        scan_flops = 6.0 * tokens * d_inner * cfg.ssm_state_dim * n_mamba
+    elif cfg.family == "ssm":  # rwkv6
+        K = cfg.head_dim
+        scan_flops = 4.0 * tokens * cfg.d_model * K * cfg.num_layers
+
+    flops = mm_flops + attn_flops + scan_flops
+
+    weight_bytes = n_active * pdt
+    act_bytes = 12.0 * tokens * cfg.d_model * (cfg.num_layers + (cfg.encoder_layers or 0)) * dt
+    logits_bytes = tokens * cfg.vocab_size * dt
+    hbm = weight_bytes + act_bytes + logits_bytes
+    return flops, hbm, {
+        "mm_flops": mm_flops,
+        "attn_flops": attn_flops,
+        "scan_flops": scan_flops,
+        "weight_bytes": weight_bytes,
+        "act_bytes": act_bytes,
+        "logits_bytes": logits_bytes,
+    }
+
+
+def analytic_cost(cfg, shape_name: str, *, kind: str, train_mode: str = "svrp",
+                  local_steps: int = 2, refresh_exact: bool = True) -> StepCost:
+    from repro.configs.shapes import INPUT_SHAPES
+
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    pdt = 2 if cfg.param_dtype == "bfloat16" else 4
+
+    if kind == "train":
+        tokens = float(B) * S
+        ctx = (min(S, cfg.sliding_window) if cfg.sliding_window else S) / 2.0
+        f1, b1, det = _fwd_cost(cfg, tokens, B, S, ctx)
+        # grad pass = fwd + bwd(2x) + remat recompute(1x) = 4x fwd flops
+        if train_mode == "svrp":
+            # anchor variate + K local (+ exact-refresh grad at x')
+            n_grads = 1 + local_steps + (1 if refresh_exact else 0)
+            flops = n_grads * 4.0 * f1 + f1  # + the loss/metrics fwd reuse ~0
+            # server state traffic: gather/scatter handled in collective term;
+            # HBM side: read+write x/w/gbar (gbar f32)
+            n_total = cfg.param_count()
+            state_bytes = 2 * (2 * n_total * pdt + n_total * 4)
+            hbm = n_grads * 4.0 * b1 + state_bytes
+        else:  # adamw
+            flops = 4.0 * f1
+            n_total = cfg.param_count()
+            state_bytes = 2 * (n_total * pdt + 2 * n_total * 4)
+            hbm = 4.0 * b1 + state_bytes
+        det["passes"] = flops / max(f1, 1)
+        return StepCost(flops, hbm, det)
+
+    if kind == "prefill":
+        tokens = float(B) * S
+        ctx = (min(S, cfg.sliding_window) if cfg.sliding_window else S) / 2.0
+        f1, b1, det = _fwd_cost(cfg, tokens, B, S, ctx)
+        return StepCost(f1, b1, det)
+
+    # decode: one token per sequence against a seq_len cache
+    tokens = float(B)
+    ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    f1, _, det = _fwd_cost(cfg, tokens, B, 1, ctx)
+    pbytes = cfg.active_param_count() * pdt  # all live weights stream once
+    # KV cache: read ctx per layer per seq + write 1
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache_rw = B * ctx * cfg.num_kv_heads * cfg.head_dim * 2 * 2 * cfg.num_layers
+    elif cfg.family == "hybrid":
+        n_sites = cfg.num_layers // cfg.attn_every
+        cache_rw = B * ctx * cfg.num_kv_heads * cfg.head_dim * 2 * 2 * n_sites
+        d_inner = cfg.ssm_expand * cfg.d_model
+        cache_rw += 2 * B * d_inner * cfg.ssm_state_dim * 4 * (cfg.num_layers - n_sites)
+    elif cfg.family == "ssm":
+        cache_rw = 2 * B * cfg.d_model * cfg.head_dim * 4 * cfg.num_layers
+    else:  # audio: self cache + cross K/V
+        F = cfg.frontend_len
+        cache_rw = B * (ctx + F) * cfg.num_kv_heads * cfg.head_dim * 2 * 2 * cfg.num_layers
+    det["cache_bytes"] = cache_rw
+    det["weight_stream_bytes"] = pbytes
+    return StepCost(f1, pbytes + cache_rw, det)
+
+
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # analytic, all devices
+    hbm_bytes: float
+    coll_bytes_per_device: float
+    chips: int
+    coll_breakdown: dict
+    coll_counts: dict
+    xla_flops_flat: float  # raw cost_analysis (loop-unaware), per device
+    xla_bytes_flat: float
+    detail: dict
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "coll_breakdown": self.coll_breakdown,
+            "coll_counts": self.coll_counts,
+            "xla_flops_flat": self.xla_flops_flat,
+            "xla_bytes_flat": self.xla_bytes_flat,
+            "detail": {k: float(v) for k, v in self.detail.items() if isinstance(v, (int, float))},
+        }
+
+
+def analyze(compiled, chips: int, cfg=None, shape_name: str | None = None,
+            kind: str | None = None, train_mode: str = "svrp",
+            local_steps: int = 2, refresh_exact: bool = True) -> Roofline:
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll, counts = collective_stats(txt)
+    if cfg is not None and shape_name is not None and kind is not None:
+        sc = analytic_cost(cfg, shape_name, kind=kind, train_mode=train_mode,
+                           local_steps=local_steps, refresh_exact=refresh_exact)
+        flops, hbm, det = sc.flops, sc.hbm_bytes, sc.detail
+    else:
+        flops = float(cost.get("flops", 0.0)) * chips
+        hbm = float(cost.get("bytes accessed", 0.0)) * chips
+        det = {}
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes_per_device=float(sum(coll.values())),
+        chips=chips,
+        coll_breakdown=coll,
+        coll_counts=counts,
+        xla_flops_flat=float(cost.get("flops", 0.0)),
+        xla_bytes_flat=float(cost.get("bytes accessed", 0.0)),
+        detail=det,
+    )
+
+
+def model_flops(cfg, shape, n_active: int | None = None) -> float:
+    """MODEL_FLOPS = 6 N D (dense) or 6 N_active D (MoE); D = tokens.
+    Training counts fwd+bwd (the 6); inference steps use 2 N D."""
+    from repro.configs.shapes import INPUT_SHAPES
+
+    sh = INPUT_SHAPES[shape] if isinstance(shape, str) else shape
+    n = n_active if n_active is not None else cfg.active_param_count()
+    if sh.kind == "train":
+        return 6.0 * n * (sh.global_batch * sh.seq_len)
+    if sh.kind == "prefill":
+        return 2.0 * n * (sh.global_batch * sh.seq_len)
+    return 2.0 * n * sh.global_batch

@@ -1,0 +1,107 @@
+"""Batched serving engine: static batching over the per-family decode paths.
+
+    server = BatchServer(cfg, params, max_batch=8, cache_len=256, quantize=True)
+    outputs = server.generate(prompts, max_new_tokens=32)
+
+Strategy: requests are grouped into fixed-size batches, prompts LEFT-padded to
+a common length (the HF convention for decoder-only batched generation), fed
+through `decode_step` token-by-token (prefill == decode with teacher forcing,
+identical cache mechanics for every family), then greedily / stochastically
+decoded.  Optional int8 weight-only quantization (repro.quant).
+
+Continuous batching (per-slot positions / paged caches) is the known next
+step; it requires per-row cache write positions, recorded as future work in
+DESIGN.md.  The production decode_32k / long_500k shapes lower this engine's
+inner `decode_step` via `launch.steps.make_serve_step`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.quant import quantize_params
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    cache_len: int = 512
+    quantize: bool = False
+    temperature: float = 0.0  # 0 = greedy
+    pad_token: int = 0
+    cache_dtype: str = "float32"
+
+
+class BatchServer:
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig | None = None):
+        self.cfg = cfg
+        self.serve = serve or ServeConfig()
+        self.params = quantize_params(params) if self.serve.quantize else params
+        self._step = jax.jit(
+            lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos)
+        )
+
+    def _fresh_cache(self, batch: int, frames=None):
+        kw = {}
+        if self.cfg.family == "audio":
+            assert frames is not None, "audio serving needs encoder frames"
+            kw = dict(params=self.params, batch={"frames": frames})
+        return M.init_decode_cache(
+            self.cfg, batch, self.serve.cache_len,
+            dtype=jnp.dtype(self.serve.cache_dtype), **kw
+        )
+
+    def generate(
+        self,
+        prompts: list[list[int]],
+        max_new_tokens: int = 32,
+        key=None,
+        frames=None,
+    ) -> list[list[int]]:
+        """Returns the generated continuation (without the prompt) per request."""
+        out: list[list[int]] = []
+        B = self.serve.max_batch
+        key = key if key is not None else jax.random.key(0)
+        for ofs in range(0, len(prompts), B):
+            group = prompts[ofs : ofs + B]
+            key, sub = jax.random.split(key)
+            out.extend(self._generate_group(group, max_new_tokens, sub, frames))
+        return out
+
+    def _generate_group(self, group, max_new, key, frames):
+        n = len(group)
+        plen = max(len(p) for p in group)
+        assert plen + max_new <= self.serve.cache_len, "cache too short"
+        # left-pad to a common length
+        toks = np.full((n, plen), self.serve.pad_token, np.int32)
+        for i, p in enumerate(group):
+            toks[i, plen - len(p):] = p
+        toks = jnp.asarray(toks)
+
+        cache = self._fresh_cache(n, frames=frames)
+        logits = None
+        for t in range(plen):  # prefill (teacher-forced decode)
+            logits, cache = self._step(self.params, toks[:, t], cache, jnp.asarray(t))
+
+        gen = []
+        tok = self._sample(logits, key, 0)
+        for t in range(plen, plen + max_new - 1):
+            gen.append(tok)
+            key, sub = jax.random.split(key)
+            logits, cache = self._step(self.params, tok, cache, jnp.asarray(t))
+            tok = self._sample(logits, sub, t)
+        gen.append(tok)
+        gen = np.asarray(jnp.stack(gen, axis=1))
+        return [list(map(int, row)) for row in gen[:n]]
+
+    def _sample(self, logits, key, t):
+        if self.serve.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            jax.random.fold_in(key, t), logits / self.serve.temperature, axis=-1
+        ).astype(jnp.int32)

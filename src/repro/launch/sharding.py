@@ -1,0 +1,232 @@
+"""Sharding rules: parameter/optimizer/cache PartitionSpecs for the mesh.
+
+Tensor-parallel ('model') layout follows the Megatron column/row pairing so
+each transformer block induces one all-reduce (or reduce-scatter/all-gather
+pair) on the 'model' axis:
+
+  embed (V,D)            -> ('model', None)      vocab-sharded
+  head  (D,V)            -> (None, 'model')
+  attn wq/wk/wv (D,HDh)  -> (None, 'model')      column
+  attn wo (HDh,D)        -> ('model', None)      row
+  mlp gate/up (D,F)      -> (None, 'model')      column
+  mlp down (F,D)         -> ('model', None)      row
+  MoE experts (E,D,F)    -> ('model', None, None) EXPERT parallel
+  norms / small vectors  -> replicated
+
+Leading layer-stack axes are never sharded (scan iterates over them).
+`zero_spec` adds ZeRO-style 'data'(+'pod') sharding on the first divisible
+dim — applied to optimizer moments and the SVRP server state (params, anchor,
+anchor_grad), which the federated step all-gathers at round start and
+reduce-scatters at round end.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# path-suffix -> (spec for the trailing dims of the leaf)
+_COLUMN = ("wq", "wk", "wv", "gate", "up", "wr", "wg", "in_proj", "fc1", "fc2", "w_a")
+_ROW = ("wo", "down", "out_proj", "w_b")
+
+
+def _canon_names(names: list[str]) -> list[str]:
+    """int8-quantized leaves ('q') shard like their weights ('w')."""
+    return ["w" if n == "q" else n for n in names]
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return names
+
+
+_ATTN_Q = ("wq",)
+_ATTN_KV = ("wk", "wv")
+_ATTN_O = ("wo",)
+
+
+def param_pspec(path, leaf, mesh, cfg=None) -> P:
+    names = _canon_names(_path_names(path))
+    if names and names[-1] == "s":  # quantization scales: replicated
+        return P(*([None] * leaf.ndim))
+    ndim = leaf.ndim
+    msize = mesh.shape["model"]
+
+    def fits(dim_from_end: int) -> bool:
+        return leaf.shape[ndim - dim_from_end] % msize == 0
+
+    # head-aware TP: shard attention projections on the head dim ONLY when the
+    # head count divides the TP degree — otherwise GSPMD slices across head
+    # boundaries and thrashes with reshard collectives (measured; see
+    # EXPERIMENTS.md §Perf).  Non-divisible head groups stay replicated.
+    q_ok = kv_ok = True
+    if cfg is not None:
+        q_ok = cfg.num_heads % msize == 0
+        kv_ok = cfg.num_kv_heads % msize == 0
+    in_attn = "attn" in names or "self_attn" in names or "cross_attn" in names
+    is_rwkv_tm = "tm" in names  # rwkv time-mix projections are per-channel, not per-head
+
+    spec: tuple = (None,) * ndim
+
+    def set_last(k: int, axis):
+        s = list(spec)
+        s[ndim - k] = axis
+        return tuple(s)
+
+    if "emb" in names and ndim >= 2 and fits(2):
+        spec = set_last(2, "model")  # (V, D) vocab-sharded
+    elif "head" in names and "w" in names and fits(1):
+        spec = set_last(1, "model")  # (D, V)
+    elif "experts" in names or ("shared" in names and ndim >= 3):
+        # stacked expert weights (E, D, F)/(E, F, D): expert parallelism on E
+        e_dim = ndim - 3 if ndim >= 3 else None
+        if e_dim is not None and leaf.shape[e_dim] % msize == 0:
+            s = list(spec)
+            s[e_dim] = "model"
+            spec = tuple(s)
+    elif (
+        ("tm" in names or "cm" in names)
+        and any(n in ("wk", "wv", "wr", "wg") for n in names)
+        and "w" in names
+        and fits(1)
+    ):
+        # rwkv projections are per-channel: plain column TP
+        spec = set_last(1, "model")
+    elif in_attn and any(n in _ATTN_Q for n in names) and not is_rwkv_tm:
+        if q_ok and "w" in names and fits(1):
+            spec = set_last(1, "model")
+        elif q_ok and "b" in names and fits(1):
+            spec = set_last(1, "model")
+    elif in_attn and any(n in _ATTN_KV for n in names) and not is_rwkv_tm:
+        if kv_ok and "w" in names and fits(1):
+            spec = set_last(1, "model")
+        elif kv_ok and "b" in names and fits(1):
+            spec = set_last(1, "model")
+    elif in_attn and any(n in _ATTN_O for n in names):
+        if q_ok and "w" in names and fits(2):
+            spec = set_last(2, "model")
+    elif any(n in _COLUMN for n in names) and "w" in names and ndim >= 2 and fits(1):
+        spec = set_last(1, "model")
+    elif any(n in _ROW for n in names) and "w" in names and ndim >= 2 and fits(2):
+        spec = set_last(2, "model")
+    elif any(n in _COLUMN for n in names) and "b" in names and fits(1):
+        spec = set_last(1, "model")
+    elif "conv_w" in names and ndim >= 2 and fits(1):
+        spec = set_last(1, "model")
+    elif "conv_b" in names and fits(1):
+        spec = set_last(1, "model")
+    # everything else (norms, u, mu, A_log, D, dt_bias, router, loras) replicated
+    return P(*spec)
+
+
+def param_pspecs(params: PyTree, mesh, cfg=None) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, mesh, cfg), params
+    )
+
+
+def zero_spec(pspec: P, shape, mesh, axes=("data",)) -> P:
+    """Add ZeRO sharding over `axes` on the first unsharded, divisible dim."""
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (dim, cur) in enumerate(zip(shape, spec)):
+        if cur is None and dim % n == 0 and dim >= n:
+            spec[i] = axes if len(axes) > 1 else axes[0]
+            return P(*spec)
+    return P(*spec)  # nothing divisible: stays as-is (small leaf)
+
+
+def zero_pspecs(params: PyTree, mesh, axes=("data",), cfg=None) -> PyTree:
+    base = param_pspecs(params, mesh, cfg)
+    return jax.tree.map(
+        lambda leaf, ps: zero_spec(ps, leaf.shape, mesh, axes),
+        params,
+        base,
+    )
+
+
+def shardings_of(pspecs: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- batches
+def batch_pspec(batch_like: PyTree, mesh) -> PyTree:
+    """Leading (global-batch) dim over ('pod','data') when divisible."""
+    daxes = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    n = 1
+    for a in daxes:
+        n *= mesh.shape[a]
+    ax = daxes if len(daxes) > 1 else daxes[0]
+
+    def spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            return P(ax, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, batch_like)
+
+
+# ------------------------------------------------------------------ caches
+def cache_pspec(cache_like: PyTree, mesh, cfg=None) -> PyTree:
+    """Decode-cache shardings, family-aware.
+
+    KV caches (..., B, S, KVH, Dh): batch over the client axes when divisible;
+    'model' goes on KVH when the KV-head count divides the TP degree, else on
+    the CACHE LENGTH S (sequence-sharded attention: local partial softmax +
+    small all-reduces — far cheaper than sharding the Dh contraction, which
+    triggers involuntary remat in SPMD; measured, see EXPERIMENTS.md).
+    SSM/RWKV states shard batch over clients and heads/channels over 'model'.
+    """
+    daxes = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    nd = 1
+    for a in daxes:
+        nd *= mesh.shape[a]
+    dax = daxes if len(daxes) > 1 else daxes[0]
+    msize = mesh.shape["model"]
+    kv_ok = cfg is not None and cfg.num_kv_heads % msize == 0
+
+    def _batch_dim(s, leaf, candidates):
+        for b_ax in candidates:
+            if leaf.ndim > b_ax and leaf.shape[b_ax] % nd == 0 and leaf.shape[b_ax] >= nd:
+                s[b_ax] = dax
+                return
+        return
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        s: list = [None] * leaf.ndim
+        is_kv = any(n in ("k", "v", "cross_k", "cross_v") for n in names)
+        if is_kv and leaf.ndim >= 4:
+            # (L?, B, S, KVH, Dh)
+            _batch_dim(s, leaf, (leaf.ndim - 4,))
+            if kv_ok and leaf.shape[-2] % msize == 0:
+                s[-2] = "model"
+            elif leaf.shape[-3] % msize == 0 and s[leaf.ndim - 3] is None:
+                s[-3] = "model"  # sequence-sharded cache
+            elif leaf.shape[-1] % msize == 0:
+                s[-1] = "model"
+            return P(*s)
+        # states: shard batch on clients, then the largest divisible dim on model
+        _batch_dim(s, leaf, (1, 2, 0))
+        best = None
+        for i in range(leaf.ndim - 1, -1, -1):
+            if s[i] is None and leaf.shape[i] % msize == 0 and leaf.shape[i] >= msize:
+                if best is None or leaf.shape[i] > leaf.shape[best]:
+                    best = i
+        if best is not None:
+            s[best] = "model"
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_like)

@@ -1,0 +1,17 @@
+from repro.models.model import (
+    build_model,
+    init_params,
+    forward,
+    loss_fn,
+    init_decode_cache,
+    decode_step,
+)
+
+__all__ = [
+    "build_model",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_decode_cache",
+    "decode_step",
+]

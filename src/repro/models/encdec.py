@@ -1,0 +1,160 @@
+"""Encoder-decoder audio backbone (seamless-m4t style) [arXiv:2308.11596].
+
+Per the brief, the modality frontend (mel-spectrogram + conv feature
+extractor) is a STUB: `input_specs()` provides precomputed frame embeddings
+(B, F, d_model).  This module implements the transformer backbone that
+consumes them: a non-causal self-attention encoder and a causal decoder with
+cross-attention.  (The released model's encoder is a conformer; we implement
+the transformer backbone per the carve-out — recorded in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as nn
+from repro.models.transformer import _attn_cfg
+from repro.utils import shard
+
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dtype),
+        "attn": nn.attn_init(k1, _attn_cfg(cfg, causal=False), dtype),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": nn.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": nn.attn_init(k1, _attn_cfg(cfg), dtype),
+        "ln_x": nn.rmsnorm_init(cfg.d_model, dtype),
+        "cross_attn": nn.attn_init(k2, _attn_cfg(cfg, causal=False), dtype),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": nn.mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_e, k_d, k_emb, k_h = jax.random.split(key, 4)
+    ekeys = jax.random.split(k_e, cfg.encoder_layers)
+    dkeys = jax.random.split(k_d, cfg.num_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(ekeys),
+        "enc_ln_f": nn.rmsnorm_init(cfg.d_model, dtype),
+        "embed": nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dkeys),
+        "ln_f": nn.rmsnorm_init(cfg.d_model, dtype),
+        "head": nn.linear_init(k_h, cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames, *, remat=True):
+    """frames: (B, F, d_model) precomputed frame embeddings -> memory."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt)
+    B, F, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(F), (B, F))
+    acfg = _attn_cfg(cfg, causal=False)
+
+    def body(x, lp):
+        x = shard.replicated(x)
+        h = nn.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps)
+        x = x + nn.attn_apply(lp["attn"], acfg, h, positions)
+        x = x + nn.mlp_apply(lp["mlp"], nn.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps))
+        return shard.replicated(x), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return nn.rmsnorm_apply(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def encdec_forward(params, cfg: ModelConfig, frames, tokens, *, remat=True):
+    """Teacher-forced training forward: returns (B, S, V) logits."""
+    memory = encode(params, cfg, frames, remat=remat)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = nn.embed_apply(params["embed"], tokens).astype(cdt)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    acfg = _attn_cfg(cfg)
+    xcfg = _attn_cfg(cfg, causal=False)
+
+    def body(x, lp):
+        x = shard.replicated(x)
+        h = nn.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps)
+        x = x + nn.attn_apply(lp["self_attn"], acfg, h, positions)
+        h = nn.rmsnorm_apply(lp["ln_x"], x, cfg.norm_eps)
+        x = x + nn.cross_attn_apply(lp["cross_attn"], xcfg, h, memory)
+        x = x + nn.mlp_apply(lp["mlp"], nn.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps))
+        return shard.replicated(x), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = nn.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return nn.unembed_apply(params["head"], x)
+
+
+# ----------------------------------------------------------------- decode
+def encdec_cache_init(params, cfg: ModelConfig, frames, cache_len: int, dtype=jnp.bfloat16):
+    """Runs the encoder once and precomputes per-layer cross-attention K/V."""
+    memory = encode(params, cfg, frames, remat=False)
+    B, F, _ = memory.shape
+
+    def cross_kv(lp):
+        ca = lp["cross_attn"]
+        k = nn.linear_apply(ca["wk"], memory).reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+        v = nn.linear_apply(ca["wv"], memory).reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+        return k.astype(dtype), v.astype(dtype)
+
+    xk, xv = jax.vmap(cross_kv)(params["dec_layers"])  # (L, B, F, KVH, Dh)
+    kv_shape = (cfg.num_layers, B, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+        "cross_k": xk,
+        "cross_v": xv,
+    }
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, cache, pos):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = nn.embed_apply(params["embed"], token[:, None]).astype(cdt)
+    acfg = _attn_cfg(cfg)
+    B = x.shape[0]
+    F = cache["cross_k"].shape[2]
+    valid_x = jnp.ones((F,), bool)
+
+    from repro.kernels import ops as kops
+
+    def body(x, scanned):
+        lp, kc, vc, xk, xv = scanned
+        h = nn.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps)
+        a, kc, vc = nn.attn_decode_apply(lp["self_attn"], acfg, h, kc, vc, pos)
+        x = x + a
+        h = nn.rmsnorm_apply(lp["ln_x"], x, cfg.norm_eps)
+        ca = lp["cross_attn"]
+        q = nn.linear_apply(ca["wq"], h).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+        o = kops.decode_attention(q, xk, xv, valid_x)
+        x = x + nn.linear_apply(ca["wo"], o.reshape(B, 1, cfg.num_heads * cfg.head_dim))
+        x = x + nn.mlp_apply(lp["mlp"], nn.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps))
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body,
+        x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = nn.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = nn.unembed_apply(params["head"], x)[:, 0]
+    new_cache = dict(cache)
+    new_cache["k"] = k_new
+    new_cache["v"] = v_new
+    return logits, new_cache

@@ -1,0 +1,218 @@
+"""Shared building blocks: RMSNorm, RoPE, SwiGLU, GQA attention, embeddings.
+
+Everything is pure-functional: `*_init(key, cfg) -> params dict`,
+`*_apply(params, x, ...) -> y`.  Attention is *chunked* (online softmax over
+KV blocks, flash-style in pure JAX) so that the compiled graph never
+materializes an (S, S) score matrix — this is both the CPU/compile-safe
+default and the numerical oracle for the Pallas flash kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- Linear
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32, scale=None):
+    if scale is None:
+        scale = d_in**-0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p, x):
+    w = p["w"]
+    if isinstance(w, dict):  # int8 weight-only quantization (repro.quant)
+        # convert+scale fuse into the matmul read on TPU: int8 HBM traffic
+        w = w["q"].astype(x.dtype) * w["s"].astype(x.dtype)
+    else:
+        w = w.astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ------------------------------------------------------------ SwiGLU MLP
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d_model, d_ff, dtype=dtype),
+        "up": linear_init(k2, d_model, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(linear_apply(p["gate"], x)) * linear_apply(p["up"], x)
+    return linear_apply(p["down"], h)
+
+
+# ------------------------------------------------------- GQA attention
+class AttnConfig(NamedTuple):
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None  # None = full causal
+    causal: bool = True  # False for encoder self-attention
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": linear_init(kq, d, h * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": linear_init(kk, d, kvh * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": linear_init(kv, d, kvh * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": linear_init(ko, h * dh, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, dtype)
+        p["k_norm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def _project_qkv(p, cfg: AttnConfig, x, positions, rope: bool = True):
+    B, S, _ = x.shape
+    q = linear_apply(p["wq"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = linear_apply(p["wk"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = linear_apply(p["wv"], x).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, cfg: AttnConfig, x, positions=None):
+    """Self-attention over a full sequence (training / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = kops.attention(
+        q, k, v, causal=cfg.causal, sliding_window=cfg.sliding_window
+    )  # (B, S, H, Dh)
+    return linear_apply(p["wo"], o.reshape(B, S, cfg.num_heads * cfg.head_dim))
+
+
+def cross_attn_apply(p, cfg: AttnConfig, x, memory):
+    """Cross-attention: queries from x, keys/values from encoder memory."""
+    B, S, _ = x.shape
+    Sm = memory.shape[1]
+    q = linear_apply(p["wq"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = linear_apply(p["wk"], memory).reshape(B, Sm, cfg.num_kv_heads, cfg.head_dim)
+    v = linear_apply(p["wv"], memory).reshape(B, Sm, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    o = kops.attention(q, k, v, causal=False, sliding_window=None)
+    return linear_apply(p["wo"], o.reshape(B, S, cfg.num_heads * cfg.head_dim))
+
+
+# --------------------------------------------------- decode-time attention
+def attn_decode_apply(p, cfg: AttnConfig, x, k_cache, v_cache, pos):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d); k_cache/v_cache: (B, S_cache, KVH, Dh); pos: () current
+    absolute position.  For sliding-window configs the cache is a ring buffer
+    of length `window` written at pos % window by the caller; masking is by
+    absolute position distance.
+    Returns (out, k_new, v_new) where k_new/v_new are the updated caches.
+    """
+    B = x.shape[0]
+    S_cache = k_cache.shape[1]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+
+    slot = pos % S_cache if cfg.sliding_window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+
+    # Key absolute positions for masking.
+    idx = jnp.arange(S_cache)
+    if cfg.sliding_window is not None:
+        # ring buffer: slot i holds absolute position with (abs % S) == i and
+        # abs <= pos; i.e. abs = i + S * floor((pos - i)/S) when valid.
+        abs_pos = idx + S_cache * ((pos - idx) // S_cache)
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (pos - abs_pos < cfg.sliding_window)
+    else:
+        abs_pos = idx
+        valid = idx <= pos
+
+    o = kops.decode_attention(q, k_cache, v_cache, valid)  # (B, 1, H, Dh)
+    out = linear_apply(p["wo"], o.reshape(B, 1, cfg.num_heads * cfg.head_dim))
+    return out, k_cache, v_cache
+
+
+# ------------------------------------------------------------- embeddings
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"emb": (jax.random.normal(key, (vocab, d_model), jnp.float32) * d_model**-0.5).astype(dtype)}
+
+
+def embed_apply(p, tokens):
+    emb = p["emb"]
+    if isinstance(emb, dict):  # int8 rows (per-row scales)
+        rows = jnp.take(emb["q"], tokens, axis=0).astype(jnp.float32)
+        scales = jnp.take(emb["s"][:, 0], tokens, axis=0)
+        return rows * scales[..., None]
+    return jnp.take(emb, tokens, axis=0)
+
+
+def unembed_apply(p_head, x):
+    """lm head: x (B,S,D) -> logits (B,S,V), computed via matmul."""
+    return linear_apply(p_head, x)
+
+
+def cross_entropy_loss(logits, labels, *, z_loss: float = 0.0):
+    """Token-mean cross entropy in float32 (labels: int32, -1 = ignore)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

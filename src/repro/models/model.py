@@ -1,0 +1,120 @@
+"""Uniform model API over all families — the surface the launcher, examples
+and tests program against.
+
+    params = init_params(cfg, key)
+    logits  = forward(params, cfg, batch)          # family-appropriate
+    loss    = loss_fn(params, cfg, batch)          # scalar, f32
+    cache   = init_decode_cache(cfg, batch_size, cache_len, params=, batch=)
+    logits, cache = decode_step(params, cfg, token, cache, pos)
+
+Batch dicts by family:
+    dense/moe/ssm/hybrid: {tokens (B,S), labels (B,S)}
+    vlm:   {patches (B,P,vision_dim), tokens (B,S_text), labels (B,S_text)}
+    audio: {frames (B,F,d_model), tokens (B,S), labels (B,S)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as nn
+from repro.models import encdec, hybrid, moe, rwkv, ssm, transformer, vlm
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def build_model(cfg: ModelConfig):
+    """Returns the family's function table (init/forward/...)."""
+    return {
+        "init": lambda key: init_params(cfg, key),
+        "forward": lambda p, b, **kw: forward(p, cfg, b, **kw),
+        "loss": lambda p, b, **kw: loss_fn(p, cfg, b, **kw),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family in ("dense",):
+        return transformer.dense_init(key, cfg)
+    if cfg.family == "moe":
+        return moe.moe_init(key, cfg)
+    if cfg.family == "ssm":
+        return rwkv.rwkv_init(key, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_init(key, cfg)
+    if cfg.family == "audio":
+        return encdec.encdec_init(key, cfg)
+    if cfg.family == "vlm":
+        return vlm.vlm_init(key, cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat=True):
+    """Returns (logits, aux) — aux is the MoE load-balance loss (0 otherwise)."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family == "dense":
+        return transformer.dense_forward(params, cfg, batch["tokens"], remat=remat), zero
+    if cfg.family == "moe":
+        return moe.moe_forward(params, cfg, batch["tokens"], remat=remat)
+    if cfg.family == "ssm":
+        return rwkv.rwkv_forward(params, cfg, batch["tokens"], remat=remat), zero
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_forward(params, cfg, batch["tokens"], remat=remat), zero
+    if cfg.family == "audio":
+        return (
+            encdec.encdec_forward(params, cfg, batch["frames"], batch["tokens"], remat=remat),
+            zero,
+        )
+    if cfg.family == "vlm":
+        return vlm.vlm_forward(params, cfg, batch["patches"], batch["tokens"], remat=remat), zero
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat=True):
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # logits cover (patches + text); mask out the patch prefix.
+        P = batch["patches"].shape[1]
+        pad = jnp.full(labels.shape[:1] + (P,), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = nn.cross_entropy_loss(logits, labels)
+    return ce + MOE_AUX_WEIGHT * aux
+
+
+def init_decode_cache(
+    cfg: ModelConfig,
+    batch_size: int,
+    cache_len: int,
+    *,
+    dtype=jnp.bfloat16,
+    params=None,
+    batch=None,
+):
+    if cfg.family in ("dense", "vlm"):
+        return transformer.dense_cache_init(cfg, batch_size, cache_len, dtype)
+    if cfg.family == "moe":
+        return moe.moe_cache_init(cfg, batch_size, cache_len, dtype)
+    if cfg.family == "ssm":
+        return rwkv.rwkv_state_init(cfg, batch_size)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_cache_init(cfg, batch_size, cache_len, dtype)
+    if cfg.family == "audio":
+        assert params is not None and batch is not None, "audio cache needs encoder run"
+        return encdec.encdec_cache_init(params, cfg, batch["frames"], cache_len, dtype)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos):
+    """token: (B,) int32; pos: scalar int32. Returns (logits (B,V), cache)."""
+    if cfg.family in ("dense", "vlm"):
+        return transformer.dense_decode_step(params, cfg, token, cache, pos)
+    if cfg.family == "moe":
+        return moe.moe_decode_step(params, cfg, token, cache, pos)
+    if cfg.family == "ssm":
+        return rwkv.rwkv_decode_step(params, cfg, token, cache, pos)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_decode_step(params, cfg, token, cache, pos)
+    if cfg.family == "audio":
+        return encdec.encdec_decode_step(params, cfg, token, cache, pos)
+    raise ValueError(f"unknown family {cfg.family}")

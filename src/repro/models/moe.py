@@ -1,0 +1,289 @@
+"""Mixture-of-Experts decoder (qwen3-moe, deepseek-moe family).
+
+Fine-grained experts with top-k routing, optional always-on shared experts
+(deepseek: 2 shared + 64 routed top-6), capacity-based sort/scatter dispatch:
+
+  tokens are sorted by assigned expert, scattered into per-expert capacity
+  buffers (E, C, D), processed by a stacked expert FFN einsum, gathered back
+  and combined with router weights.  Overflow beyond capacity is dropped
+  (standard GShard/Switch semantics; capacity_factor controls slack).
+
+Under the production mesh the expert axis of the buffers is sharded over
+'model' (expert parallelism) and the scatter/gather lower to all-to-all
+style collectives — this is the arch where the paper's anchor-refresh
+all-reduce competes with dispatch traffic (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as nn
+from repro.utils import shard
+
+
+def moe_mlp_init(key, cfg: ModelConfig, dtype):
+    """Router + stacked routed experts + shared experts."""
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    E, d, ff = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ekeys = jax.random.split(k_e, E)
+    experts = jax.vmap(lambda k: nn.mlp_init(k, d, ff, dtype))(ekeys)
+    p = {
+        "router": nn.linear_init(k_r, d, E, dtype=dtype, scale=d**-0.5),
+        "experts": experts,  # leaves (E, ...)
+    }
+    if cfg.num_shared_experts:
+        skeys = jax.random.split(k_s, cfg.num_shared_experts)
+        p["shared"] = jax.vmap(lambda k: nn.mlp_init(k, d, ff, dtype))(skeys)
+    return p
+
+
+def _expert_w(leaf, dtype):
+    """Stacked expert weight, possibly int8-quantized (repro.quant)."""
+    if isinstance(leaf, dict):
+        return leaf["q"].astype(dtype) * leaf["s"].astype(dtype)
+    return leaf.astype(dtype)
+
+
+def _expert_ffn(experts_p, buf):
+    """buf: (E, C, D) -> (E, C, D) via the stacked SwiGLU expert weights."""
+    g = jnp.einsum("ecd,edf->ecf", buf, _expert_w(experts_p["gate"]["w"], buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, _expert_w(experts_p["up"]["w"], buf.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, _expert_w(experts_p["down"]["w"], buf.dtype))
+
+
+def moe_mlp_apply(p, cfg: ModelConfig, x, *, capacity_factor: float | None = None):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Sort/scatter capacity dispatch *per batch row* (vmapped over B): rows are
+    the data-sharded axis, so routing never moves tokens across data shards —
+    only the expert-buffer einsum communicates over the expert/'model' axis.
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    if capacity_factor is None:
+        capacity_factor = cfg.capacity_factor
+    C = int(max(1, (-(-S * k // E)) * capacity_factor))
+
+    logits = nn.linear_apply(p["router"], x).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w_topk, ids = jax.lax.top_k(probs, k)  # (B, S, k)
+    w_topk = w_topk / jnp.sum(w_topk, axis=-1, keepdims=True)  # renormalize
+
+    # Load-balance auxiliary loss (Switch-style), averaged over rows.
+    density = jnp.mean(jnp.sum(jax.nn.one_hot(ids, E, dtype=jnp.float32), axis=2), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density / k * mean_prob)
+
+    if cfg.moe_dispatch == "gather":
+        # ---- slot-table formulation (Perf iteration 4) ---------------------
+        # Small replicated (E, C) int tables map expert slots to their source
+        # token / assignment; then
+        #   dispatch = gather tokens by slot table -> expert-sharded, LOCAL;
+        #   combine  = scatter-ADD slot outputs into tokens -> per-shard
+        #              partial sums + ONE all-reduce of (S, D) per layer.
+        # Avoids GSPMD's select+all-reduce fallback on (S*k, D)-sized tensors
+        # that the direct scatter/gather formulation triggers (see
+        # EXPERIMENTS.md Perf).
+        def slot_tables(ids_r):
+            ids_flat = ids_r.reshape(-1)  # (S*k,)
+            order = jnp.argsort(ids_flat)
+            sorted_eid = ids_flat[order]
+            counts = jnp.bincount(ids_flat, length=E)
+            starts = jnp.cumsum(counts) - counts
+            pos = jnp.arange(S * k) - starts[sorted_eid]
+            slot_tok = jnp.full((E, C), S, jnp.int32).at[sorted_eid, pos].set(
+                (order // k).astype(jnp.int32), mode="drop"
+            )
+            slot_flat = jnp.full((E, C), S * k, jnp.int32).at[sorted_eid, pos].set(
+                order.astype(jnp.int32), mode="drop"
+            )
+            return slot_tok, slot_flat
+
+        slot_tok, slot_flat = jax.vmap(slot_tables)(ids)  # (B, E, C) x2
+
+        # One-hot dispatch/combine DOTS (not gathers/scatters): with the
+        # one-hot E-sharded, both directions (and both their backwards) are
+        # plain sharded contractions — partial sums + one (S, D)-sized
+        # all-reduce per layer.  Scatter/gather forms made GSPMD all-gather
+        # the full (E, C, D) expert buffers instead (~8x more traffic).
+        onehot = (slot_tok[..., None] == jnp.arange(S + 1)[None, None, None]).astype(
+            x.dtype
+        )  # (B, E, C, S+1); sentinel column S dropped at the end
+        onehot = shard.constrain(onehot, None, "model", None, None)
+
+        xpad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+        buf = jnp.einsum("becs,bsd->becd", onehot, xpad)  # (B, E, C, D) local
+        buf = shard.constrain(buf, None, "model", None, None)  # expert parallel
+
+        out_buf = jax.vmap(lambda b: _expert_ffn(p["experts"], b))(buf)
+        out_buf = shard.constrain(out_buf, None, "model", None, None)
+
+        w_flat = jnp.concatenate(
+            [w_topk.reshape(B, S * k).astype(x.dtype), jnp.zeros((B, 1), x.dtype)], axis=1
+        )
+        w_slot = jax.vmap(lambda wp, sf: wp[sf])(w_flat, slot_flat)  # (B, E, C)
+        contrib = out_buf * w_slot[..., None]
+        y = jnp.einsum("becd,becs->bsd", contrib, onehot)[:, :S]  # partials + AR
+    else:
+        # ---- direct scatter/gather (baseline, kept for Perf comparison) ----
+        def dispatch_row(xr, ids_r):
+            """xr: (S, D); ids_r: (S, k) -> (buf (E,C,D), sorted_eid, pos, order)."""
+            ids_flat = ids_r.reshape(-1)  # (S*k,)
+            order = jnp.argsort(ids_flat)
+            sorted_eid = ids_flat[order]
+            counts = jnp.bincount(ids_flat, length=E)
+            starts = jnp.cumsum(counts) - counts
+            pos = jnp.arange(S * k) - starts[sorted_eid]
+            tok_of = order // k
+            buf = jnp.zeros((E, C, D), x.dtype).at[sorted_eid, pos].set(xr[tok_of], mode="drop")
+            return buf, (sorted_eid, pos, order)
+
+        buf, meta = jax.vmap(dispatch_row)(x, ids)  # buf: (B, E, C, D)
+        buf = shard.constrain(buf, None, "model", None, None)  # expert parallelism
+
+        out_buf = jax.vmap(lambda b: _expert_ffn(p["experts"], b))(buf)
+        out_buf = shard.constrain(out_buf, None, "model", None, None)
+
+        def combine_row(out_b, meta_r, w_r):
+            sorted_eid, pos, order = meta_r
+            y_sorted = out_b.at[sorted_eid, pos].get(mode="fill", fill_value=0)  # (S*k, D)
+            y_sorted = y_sorted * (pos < C)[:, None].astype(x.dtype)
+            y_flat = jnp.zeros((S * k, D), x.dtype).at[order].set(y_sorted)
+            return jnp.sum(y_flat.reshape(S, k, D) * w_r[..., None].astype(x.dtype), axis=1)
+
+        y = jax.vmap(combine_row)(out_buf, meta, w_topk)  # (B, S, D)
+
+    if "shared" in p:
+        # always-on shared experts (deepseek): applied densely, summed.
+        y = y + jnp.sum(jax.vmap(lambda sp: nn.mlp_apply(sp, x))(p["shared"]), axis=0)
+
+    return y, aux
+
+
+# --------------------------------------------------------------- full model
+def _moe_layer_init(key, cfg: ModelConfig, dtype):
+    from repro.models.transformer import _attn_cfg
+
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dtype),
+        "attn": nn.attn_init(k1, _attn_cfg(cfg), dtype),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dtype),
+        "moe": moe_mlp_init(k2, cfg, dtype),
+    }
+
+
+def moe_init(key, cfg: ModelConfig):
+    from repro.models.transformer import _layer_init
+
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_dense, k_moe, k_head = jax.random.split(key, 4)
+    p = {
+        "embed": nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "ln_f": nn.rmsnorm_init(cfg.d_model, dtype),
+        "head": nn.linear_init(k_head, cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    if cfg.first_dense_layers:
+        dkeys = jax.random.split(k_dense, cfg.first_dense_layers)
+        p["dense_layers"] = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(dkeys)
+    mkeys = jax.random.split(k_moe, n_moe)
+    p["moe_layers"] = jax.vmap(lambda k: _moe_layer_init(k, cfg, dtype))(mkeys)
+    return p
+
+
+def moe_forward(params, cfg: ModelConfig, tokens, *, remat=True):
+    from repro.models.transformer import _layer_apply
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = nn.embed_apply(params["embed"], tokens).astype(cdt)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    from repro.models.transformer import _attn_cfg
+
+    acfg = _attn_cfg(cfg)
+
+    if "dense_layers" in params:
+
+        def dense_body(x, lp):
+            return _layer_apply(lp, cfg, x, positions), None
+
+        if remat:
+            dense_body = jax.checkpoint(dense_body, prevent_cse=False)
+        x, _ = jax.lax.scan(dense_body, x, params["dense_layers"])
+
+    def moe_body(carry, lp):
+        x, aux = carry
+        x = shard.replicated(x)
+        h = nn.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps)
+        x = x + nn.attn_apply(lp["attn"], acfg, h, positions)
+        x = shard.replicated(x)
+        h = nn.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps)
+        y, a = moe_mlp_apply(lp["moe"], cfg, h)
+        return (shard.replicated(x + y), aux + a), None
+
+    if remat:
+        moe_body = jax.checkpoint(moe_body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(moe_body, (x, jnp.zeros((), jnp.float32)), params["moe_layers"])
+    x = nn.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = nn.unembed_apply(params["head"], x)
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    return logits, aux / max(n_moe, 1)
+
+
+# ----------------------------------------------------------------- decode
+def moe_cache_init(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    if cfg.sliding_window is not None:
+        cache_len = min(cache_len, cfg.sliding_window)
+    n_moe = cfg.num_layers - cfg.first_dense_layers
+    kv = lambda L: {
+        "k": jnp.zeros((L, batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+    cache = {"moe": kv(n_moe)}
+    if cfg.first_dense_layers:
+        cache["dense"] = kv(cfg.first_dense_layers)
+    return cache
+
+
+def moe_decode_step(params, cfg: ModelConfig, token, cache, pos):
+    from repro.models.transformer import _attn_cfg
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = nn.embed_apply(params["embed"], token[:, None]).astype(cdt)
+    acfg = _attn_cfg(cfg)
+    new_cache = {}
+
+    if "dense_layers" in params:
+
+        def dense_body(x, scanned):
+            lp, kc, vc = scanned
+            h = nn.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps)
+            a, kc, vc = nn.attn_decode_apply(lp["attn"], acfg, h, kc, vc, pos)
+            x = x + a
+            x = x + nn.mlp_apply(lp["mlp"], nn.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps))
+            return x, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            dense_body, x, (params["dense_layers"], cache["dense"]["k"], cache["dense"]["v"])
+        )
+        new_cache["dense"] = {"k": k_new, "v": v_new}
+
+    def moe_body(x, scanned):
+        lp, kc, vc = scanned
+        h = nn.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps)
+        a, kc, vc = nn.attn_decode_apply(lp["attn"], acfg, h, kc, vc, pos)
+        x = x + a
+        h = nn.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps)
+        y, _ = moe_mlp_apply(lp["moe"], cfg, h)
+        return x + y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        moe_body, x, (params["moe_layers"], cache["moe"]["k"], cache["moe"]["v"])
+    )
+    new_cache["moe"] = {"k": k_new, "v": v_new}
+    x = nn.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return nn.unembed_apply(params["head"], x)[:, 0], new_cache

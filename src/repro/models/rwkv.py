@@ -1,0 +1,174 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) [arXiv:2404.05892].
+
+Time-mix block: token-shift lerps, low-rank data-dependent decay
+w_t = exp(-exp(w0 + tanh(x W_a) W_b)), per-head WKV recurrence (the kernel),
+gated group-normalized output.  Channel-mix block: shifted squared-ReLU FFN.
+
+The WKV recurrence lives in `repro.kernels` (ref scan / Pallas TPU kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import layers as nn
+from repro.utils import shard
+
+_DECAY_RANK = 64
+
+
+def rwkv_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    K = cfg.d_model // H  # head dim (rwkv6: 64)
+    return H, K
+
+
+def _shift(x, x_prev=None):
+    """Token shift: x[t-1] (zeros / carried state at t=0). x: (B,T,D)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def timemix_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H, K = rwkv_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": nn.rmsnorm_init(d, dtype),
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),  # r,k,v,w,g
+        "w0": (jnp.zeros((d,), jnp.float32) - 4.0),
+        "w_a": nn.linear_init(ks[1], d, _DECAY_RANK, dtype=dtype),
+        "w_b": nn.linear_init(ks[2], _DECAY_RANK, d, dtype=dtype, scale=0.01),
+        "wr": nn.linear_init(ks[3], d, d, dtype=dtype),
+        "wk": nn.linear_init(ks[4], d, d, dtype=dtype),
+        "wv": nn.linear_init(ks[5], d, d, dtype=dtype),
+        "wg": nn.linear_init(ks[6], d, d, dtype=dtype),
+        "u": (jax.random.normal(ks[7], (H, K), jnp.float32) * 0.1),
+        "ln_out": nn.rmsnorm_init(d, dtype),
+        "wo": nn.linear_init(ks[0], d, d, dtype=dtype),
+    }
+
+
+def _timemix_core(p, cfg, x, xx):
+    """Shared between full-seq and decode: compute r,k,v,w,g from x and its
+    shifted version xx."""
+    B = x.shape[0]
+    H, K = rwkv_dims(cfg)
+    mu = p["mu"].astype(x.dtype)
+    lerp = lambda i: x + (xx - x) * mu[i][None, None, :]
+    xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
+    r = nn.linear_apply(p["wr"], xr)
+    k = nn.linear_apply(p["wk"], xk)
+    v = nn.linear_apply(p["wv"], xv)
+    g = jax.nn.silu(nn.linear_apply(p["wg"], xg))
+    # data-dependent decay (the Finch signature)
+    w_raw = p["w0"][None, None, :] + nn.linear_apply(
+        p["w_b"], jnp.tanh(nn.linear_apply(p["w_a"], xw))
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_raw))  # decay factor in (0, 1)
+    T = x.shape[1]
+    heads = lambda a: a.reshape(B, T, H, K)
+    return heads(r), heads(k), heads(v), heads(w.astype(x.dtype)), g
+
+
+def timemix_apply(p, cfg: ModelConfig, x, shift_state=None, wkv_state=None):
+    """x: (B,T,D). Returns (out, new_shift_state, new_wkv_state)."""
+    h = nn.rmsnorm_apply(p["ln"], x, cfg.norm_eps)
+    xx = _shift(h, shift_state)
+    r, k, v, w, g = _timemix_core(p, cfg, h, xx)
+    y, S = kops.rwkv6_scan(r, k, v, w, p["u"], state0=wkv_state)
+    B, T = x.shape[:2]
+    y = y.reshape(B, T, cfg.d_model)
+    y = nn.rmsnorm_apply(p["ln_out"], y, cfg.norm_eps) * g
+    out = x + nn.linear_apply(p["wo"], y)
+    return out, h[:, -1:], S
+
+
+def channelmix_init(key, cfg: ModelConfig, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln": nn.rmsnorm_init(d, dtype),
+        "mu": (jax.random.uniform(k1, (2, d), jnp.float32)).astype(dtype),  # k, r
+        "wk": nn.linear_init(k2, d, ff, dtype=dtype),
+        "wv": nn.linear_init(k3, ff, d, dtype=dtype),
+        "wr": nn.linear_init(k4, d, d, dtype=dtype),
+    }
+
+
+def channelmix_apply(p, cfg: ModelConfig, x, shift_state=None):
+    h = nn.rmsnorm_apply(p["ln"], x, cfg.norm_eps)
+    xx = _shift(h, shift_state)
+    mu = p["mu"].astype(x.dtype)
+    xk = h + (xx - h) * mu[0][None, None, :]
+    xr = h + (xx - h) * mu[1][None, None, :]
+    k = jnp.square(jax.nn.relu(nn.linear_apply(p["wk"], xk)))
+    out = x + jax.nn.sigmoid(nn.linear_apply(p["wr"], xr)) * nn.linear_apply(p["wv"], k)
+    return out, h[:, -1:]
+
+
+def rwkv_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"tm": timemix_init(k1, cfg, dtype), "cm": channelmix_init(k2, cfg, dtype)}
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    lk = jax.random.split(k_layers, cfg.num_layers)
+    return {
+        "embed": nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: rwkv_layer_init(k, cfg, dtype))(lk),
+        "ln_f": nn.rmsnorm_init(cfg.d_model, dtype),
+        "head": nn.linear_init(k_head, cfg.d_model, cfg.vocab_size, dtype=dtype),
+    }
+
+
+def rwkv_forward(params, cfg: ModelConfig, tokens, *, remat=True):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = nn.embed_apply(params["embed"], tokens).astype(cdt)
+
+    def body(x, lp):
+        x = shard.replicated(x)
+        x, _, _ = timemix_apply(lp["tm"], cfg, x)
+        x = shard.replicated(x)
+        x, _ = channelmix_apply(lp["cm"], cfg, x)
+        return shard.replicated(x), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = nn.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return nn.unembed_apply(params["head"], x)
+
+
+# ----------------------------------------------------------------- decode
+def rwkv_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, K = rwkv_dims(cfg)
+    L, d = cfg.num_layers, cfg.d_model
+    return {
+        "tm_shift": jnp.zeros((L, batch, 1, d), dtype),
+        "cm_shift": jnp.zeros((L, batch, 1, d), dtype),
+        "wkv": jnp.zeros((L, batch, H, K, K), jnp.float32),
+    }
+
+
+def rwkv_decode_step(params, cfg: ModelConfig, token, state, pos):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = nn.embed_apply(params["embed"], token[:, None]).astype(cdt)
+
+    def body(x, scanned):
+        lp, tm_s, cm_s, wkv_s = scanned
+        x, tm_next, wkv_next = timemix_apply(lp["tm"], cfg, x, tm_s.astype(cdt), wkv_s)
+        x, cm_next = channelmix_apply(lp["cm"], cfg, x, cm_s.astype(cdt))
+        return x, (tm_next.astype(tm_s.dtype), cm_next.astype(cm_s.dtype), wkv_next)
+
+    x, (tm_new, cm_new, wkv_new) = jax.lax.scan(
+        body, x, (params["layers"], state["tm_shift"], state["cm_shift"], state["wkv"])
+    )
+    x = nn.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = nn.unembed_apply(params["head"], x)[:, 0]
+    return logits, {"tm_shift": tm_new, "cm_shift": cm_new, "wkv": wkv_new}

@@ -1,0 +1,122 @@
+"""Mamba-2 blocks (zamba2's backbone) — selective state space with scalar
+per-head decay, causal conv on (x, B, C), gated output.
+
+The scan itself lives in `repro.kernels` (chunked jnp fast path / Pallas TPU
+kernel); this module is projections + conv + gating + the decode-time
+single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import layers as nn
+from repro.utils import shard
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_num_heads or d_inner // cfg.ssm_head_dim
+    P = d_inner // H
+    N = cfg.ssm_state_dim
+    return d_inner, H, P, N
+
+
+def mamba_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, H, P, N = mamba_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln": nn.rmsnorm_init(d, dtype),
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": nn.linear_init(k1, d, 2 * d_inner + 2 * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (jax.random.uniform(k3, (H,), jnp.float32, -4.0, -1.0)),
+        "out_norm": nn.rmsnorm_init(d_inner, dtype),
+        "out_proj": nn.linear_init(k4, d_inner, d, dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_inner, H, P, N = mamba_dims(cfg)
+    z, xc, B_mat, C_mat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, xc, B_mat, C_mat, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (B, T, C); depthwise causal conv, width W = w.shape[0]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # depthwise: sum over taps of shifted inputs
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype) for i in range(W)
+    )
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def mamba_apply(p, cfg: ModelConfig, x):
+    """x: (B, T, D) -> (B, T, D). Full-sequence (train / prefill)."""
+    x = shard.replicated(x)
+    B, T, D = x.shape
+    d_inner, H, P, N = mamba_dims(cfg)
+    h = nn.rmsnorm_apply(p["ln"], x, cfg.norm_eps)
+    z, xc, B_mat, C_mat, dt = _split_proj(cfg, nn.linear_apply(p["in_proj"], h))
+
+    conv_in = jnp.concatenate([xc, B_mat, C_mat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xc, B_mat, C_mat = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(B, T, H, P)
+    y, _ = kops.ssm_scan(xh, dt, A, B_mat, C_mat, p["D"])
+    y = y.reshape(B, T, d_inner)
+    y = nn.rmsnorm_apply(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return shard.replicated(x + nn.linear_apply(p["out_proj"], y))
+
+
+# ----------------------------------------------------------------- decode
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, H, P, N = mamba_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_decode_step(p, cfg: ModelConfig, x, state):
+    """x: (B, 1, D); constant-memory single-token step."""
+    B = x.shape[0]
+    d_inner, H, P, N = mamba_dims(cfg)
+    h = nn.rmsnorm_apply(p["ln"], x, cfg.norm_eps)
+    z, xc, B_mat, C_mat, dt = _split_proj(cfg, nn.linear_apply(p["in_proj"], h))
+
+    conv_in = jnp.concatenate([xc, B_mat, C_mat], axis=-1)  # (B,1,C)
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B,W,C)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))[:, None, :].astype(x.dtype)
+    xc, B_mat, C_mat = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])  # (B,1,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(B, H, P).astype(jnp.float32)
+    decay = jnp.exp(A[None] * dt[:, 0])  # (B,H)
+    upd = (dt[:, 0, :, None] * xh)[..., None] * B_mat[:, 0][:, None, None, :]
+    ssm_next = decay[..., None, None] * state["ssm"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_next, C_mat[:, 0].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = nn.rmsnorm_apply(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = x + nn.linear_apply(p["out_proj"], y)
+    state_next = {"conv": window[:, 1:], "ssm": ssm_next}
+    return out, state_next

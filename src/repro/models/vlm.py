@@ -1,0 +1,59 @@
+"""VLM backbone (InternVL2-76B style): InternLM2-flavoured GQA decoder that
+consumes projected vision-patch embeddings [arXiv:2404.16821].
+
+Per the brief the ViT (InternViT-6B) is a STUB — `input_specs()` provides
+precomputed patch embeddings (B, P, frontend_dim); this module implements the
+MLP projector and the 80-layer language decoder (shared with the dense
+family), training with patch positions loss-masked.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as nn
+from repro.models.transformer import (
+    dense_cache_init,
+    dense_decode_step,
+    dense_forward,
+    dense_init,
+)
+
+# InternViT-6B output width (the projector's input side).
+DEFAULT_VISION_DIM = 3200
+
+
+def vlm_init(key, cfg: ModelConfig, vision_dim: int = DEFAULT_VISION_DIM):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_lm, k_p1, k_p2 = jax.random.split(key, 3)
+    p = dense_init(k_lm, cfg)
+    p["projector"] = {
+        "ln": nn.rmsnorm_init(vision_dim, dtype),
+        "fc1": nn.linear_init(k_p1, vision_dim, cfg.d_model, dtype=dtype),
+        "fc2": nn.linear_init(k_p2, cfg.d_model, cfg.d_model, dtype=dtype),
+    }
+    return p
+
+
+def project_patches(params, cfg: ModelConfig, patches):
+    """patches: (B, P, vision_dim) -> (B, P, d_model)."""
+    h = nn.rmsnorm_apply(params["projector"]["ln"], patches, cfg.norm_eps)
+    h = jax.nn.gelu(nn.linear_apply(params["projector"]["fc1"], h))
+    return nn.linear_apply(params["projector"]["fc2"], h)
+
+
+def vlm_forward(params, cfg: ModelConfig, patches, tokens, *, remat=True):
+    """Prepends projected patches to token embeddings; returns logits over the
+    FULL (patches + text) sequence — callers mask patch positions via labels."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    vis = project_patches(params, cfg, patches.astype(cdt))
+    txt = nn.embed_apply(params["embed"], tokens).astype(cdt)
+    embeds = jnp.concatenate([vis, txt], axis=1)
+    return dense_forward(params, cfg, inputs_embeds=embeds, remat=remat)
+
+
+# decode: after the multimodal prompt is prefilled into the cache, decoding is
+# identical to the dense family.
+vlm_cache_init = dense_cache_init
+vlm_decode_step = dense_decode_step

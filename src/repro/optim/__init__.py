@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    sgdm_init,
+    sgdm_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    linear_warmup_cosine,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "sgdm_init",
+    "sgdm_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,106 @@
+"""Pure-JAX optimizers and schedules (no optax dependency by design — the
+container is offline and the substrate must be self-contained).
+
+AdamW keeps moments in f32 regardless of param dtype (bf16-safe); under the
+production mesh the moment pytrees inherit the params' shardings plus the
+ZeRO-style 'data' axis sharding applied by `launch.sharding`.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_sqnorm
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree  # first moment (f32)
+    nu: PyTree  # second moment (f32)
+
+
+def adamw_init(params: PyTree) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+    )
+
+
+def adamw_update(
+    grads: PyTree,
+    state: OptState,
+    params: PyTree,
+    *,
+    lr: float | jax.Array = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[PyTree, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * g32
+        v_new = b2 * v + (1.0 - b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu)
+
+
+class SGDMState(NamedTuple):
+    step: jax.Array
+    momentum: PyTree
+
+
+def sgdm_init(params: PyTree) -> SGDMState:
+    return SGDMState(
+        step=jnp.zeros((), jnp.int32),
+        momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    )
+
+
+def sgdm_update(grads, state: SGDMState, params, *, lr=1e-2, beta=0.9):
+    def upd(g, m, p):
+        m_new = beta * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m_new).astype(p.dtype), m_new
+
+    out = jax.tree.map(upd, grads, state.momentum, params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, SGDMState(step=state.step + 1, momentum=new_m)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = jnp.sqrt(tree_sqnorm(grads))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def cosine_schedule(step, *, base_lr: float, total_steps: int, final_frac: float = 0.1):
+    frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return base_lr * (final_frac + (1.0 - final_frac) * cos)
+
+
+def linear_warmup_cosine(step, *, base_lr: float, warmup: int, total_steps: int):
+    s = step.astype(jnp.float32)
+    warm = base_lr * s / max(warmup, 1)
+    decay = cosine_schedule(step - warmup, base_lr=base_lr, total_steps=max(total_steps - warmup, 1))
+    return jnp.where(s < warmup, warm, decay)

@@ -1,0 +1,10 @@
+from repro.problems.quadratic import QuadraticProblem, make_synthetic_quadratic, make_ridge_problem
+from repro.problems.logistic import LogisticProblem, make_a9a_like_problem
+
+__all__ = [
+    "QuadraticProblem",
+    "make_synthetic_quadratic",
+    "make_ridge_problem",
+    "LogisticProblem",
+    "make_a9a_like_problem",
+]

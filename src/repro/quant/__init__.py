@@ -1,0 +1,3 @@
+from repro.quant.quant import quantize_params, dequantize_params, quantization_error
+
+__all__ = ["quantize_params", "dequantize_params", "quantization_error"]

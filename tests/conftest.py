@@ -1,0 +1,6 @@
+import jax
+
+# The paper-faithful layer validates convergence to ~1e-12 of the optimum;
+# float64 is required for that. Model/kernel code pins its dtypes explicitly,
+# so enabling x64 globally is safe for the whole suite.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,64 @@
+"""Every baseline from Fig. 1 / Table 1 converges with its theory parameters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    run_acc_extragradient,
+    run_dane,
+    run_scaffold,
+    run_sgd,
+    run_svrg,
+)
+from repro.problems import make_synthetic_quadratic
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_synthetic_quadratic(num_clients=25, dim=10, mu=1.0, L=300.0, delta=10.0, seed=7)
+
+
+def test_sgd_converges_to_noise_floor(prob):
+    x_star = prob.minimizer()
+    L = float(prob.smoothness_max())
+    res = run_sgd(prob, jnp.zeros(prob.dim), x_star, stepsize=1 / (2 * L),
+                  num_steps=5000, key=jax.random.key(0))
+    assert float(res.dist_sq[-1]) < 0.5 * float(res.dist_sq[0])
+    # sublinear: does NOT reach machine precision (the noise floor is real)
+    assert float(res.dist_sq[-1]) > 1e-12
+
+
+def test_svrg_linear(prob):
+    x_star = prob.minimizer()
+    L = float(prob.smoothness_max())
+    res = run_svrg(prob, jnp.zeros(prob.dim), x_star, stepsize=1 / (6 * L), p=1 / 25,
+                   num_steps=40_000, key=jax.random.key(0))
+    assert float(res.dist_sq[-1]) < 1e-18
+
+
+def test_scaffold_converges(prob):
+    x_star = prob.minimizer()
+    L = float(prob.smoothness_max())
+    res = run_scaffold(prob, jnp.zeros(prob.dim), x_star, local_lr=1 / (4 * L),
+                       global_lr=1.0, local_steps=5, num_rounds=4000, key=jax.random.key(0))
+    assert float(res.dist_sq[-1]) < 1e-10
+
+
+def test_dane_linear_with_theta_delta_max(prob):
+    x_star = prob.minimizer()
+    dmax = float(prob.similarity_max())
+    res = run_dane(prob, jnp.zeros(prob.dim), x_star, theta=dmax, num_rounds=80)
+    assert float(res.dist_sq[-1]) < 1e-18
+    # comm = 2M + 2 per round
+    assert int(res.comm[0]) == 2 * 25 + 2
+
+
+def test_acc_extragradient_linear_and_accelerated(prob):
+    x_star = prob.minimizer()
+    mu = float(prob.strong_convexity())
+    dmax = float(prob.similarity_max())
+    res = run_acc_extragradient(prob, jnp.zeros(prob.dim), x_star, theta=dmax, mu=mu,
+                                num_rounds=80)
+    assert float(res.dist_sq[-1]) < 1e-18
+    assert int(res.comm[0]) == 4 * 25 + 2

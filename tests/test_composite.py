@@ -1,0 +1,51 @@
+"""Theorem 5: composite SVRP (Algorithm 4) on l1 / box / l2-ball constraints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    composite_minimizer_pgd,
+    prox_box,
+    prox_l1,
+    prox_l2ball,
+    run_composite_svrp,
+    theorem2_stepsize,
+)
+from repro.problems import make_synthetic_quadratic
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_synthetic_quadratic(num_clients=15, dim=8, mu=1.0, L=150.0, delta=5.0,
+                                    noise=5.0, seed=11)
+
+
+@pytest.mark.parametrize(
+    "name,prox_R",
+    [
+        ("l1", lambda z, t: prox_l1(z, 0.05 * t)),
+        ("box", prox_box(-0.05, 0.05)),
+        ("l2ball", prox_l2ball(0.1)),
+    ],
+)
+def test_composite_svrp_converges(prob, name, prox_R):
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    L = float(prob.smoothness_max())
+    x_star = composite_minimizer_pgd(prob, prox_R, L=float(prob.smoothness()), num_steps=30_000)
+    res = run_composite_svrp(
+        prob, prox_R, jnp.zeros(prob.dim), x_star,
+        eta=theorem2_stepsize(mu, delta), p=1 / 15, num_steps=2500,
+        key=jax.random.key(0), smoothness=L, mu=mu, prox_steps=120,
+    )
+    assert float(res.dist_sq[-1]) < 1e-12, name
+
+
+def test_constraint_is_active(prob):
+    """The test is only meaningful if R actually binds at the solution."""
+    prox_R = prox_l2ball(0.1)
+    x_star_c = composite_minimizer_pgd(prob, prox_R, L=float(prob.smoothness()), num_steps=30_000)
+    x_star_u = prob.minimizer()
+    assert float(jnp.linalg.norm(x_star_u)) > 0.1  # unconstrained falls outside
+    assert float(jnp.linalg.norm(x_star_c)) <= 0.1 + 1e-9

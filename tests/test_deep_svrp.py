@@ -1,0 +1,121 @@
+"""DeepSVRP (the pod-scale pytree adaptation) and its federated baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeepSVRPConfig,
+    deep_scaffold_init,
+    deep_scaffold_round,
+    deep_svrp_init,
+    deep_svrp_round,
+    fedavg_round,
+    FedAvgState,
+)
+
+
+def _toy_loss(params, batch):
+    x, y = batch
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    pred = h @ params["w2"]
+    return jnp.mean((pred - y) ** 2)
+
+
+@pytest.fixture()
+def setup():
+    key = jax.random.key(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "w1": jax.random.normal(k1, (4, 16)) * 0.5,
+        "b1": jnp.zeros(16),
+        "w2": jax.random.normal(k2, (16, 1)) * 0.5,
+    }
+    x = jax.random.normal(k3, (64, 4))
+    w_true = jax.random.normal(k4, (4, 1))
+    y = x @ w_true + 0.01 * jax.random.normal(k1, (64, 1))
+    return params, (x, y)
+
+
+def test_deep_svrp_decreases_loss(setup):
+    params, batch = setup
+    cfg = DeepSVRPConfig(eta=1.0, local_lr=0.1, local_steps=5, anchor_prob=0.3)
+    grad0 = jax.grad(_toy_loss)(params, batch)
+    state = deep_svrp_init(params, grad0, jax.random.key(1))
+    l0 = float(_toy_loss(params, batch))
+    for _ in range(60):
+        state, loss = deep_svrp_round(_toy_loss, state, batch, cfg)
+    assert float(_toy_loss(state.params, batch)) < 0.2 * l0
+
+
+def test_deep_svrp_anchor_refresh_semantics(setup):
+    """With anchor_prob=0 the anchor never moves; with 1 it always tracks."""
+    params, batch = setup
+    grad0 = jax.grad(_toy_loss)(params, batch)
+    cfg0 = DeepSVRPConfig(eta=1.0, local_lr=0.05, local_steps=2, anchor_prob=0.0)
+    state = deep_svrp_init(params, grad0, jax.random.key(2))
+    for _ in range(3):
+        state, _ = deep_svrp_round(_toy_loss, state, batch, cfg0)
+    for a, b in zip(jax.tree.leaves(state.anchor), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    cfg1 = DeepSVRPConfig(eta=1.0, local_lr=0.05, local_steps=2, anchor_prob=1.0)
+    state = deep_svrp_init(params, grad0, jax.random.key(2))
+    state, _ = deep_svrp_round(_toy_loss, state, batch, cfg1)
+    for a, b in zip(jax.tree.leaves(state.anchor), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fedavg_and_scaffold_rounds(setup):
+    params, batch = setup
+    st = FedAvgState(params=params, step=jnp.zeros((), jnp.int32))
+    l0 = float(_toy_loss(params, batch))
+    for _ in range(40):
+        st, _ = fedavg_round(_toy_loss, st, batch, local_lr=0.05, local_steps=5)
+    assert float(_toy_loss(st.params, batch)) < 0.5 * l0
+
+    sst = deep_scaffold_init(params)
+    for _ in range(40):
+        sst, _ = deep_scaffold_round(_toy_loss, sst, batch, local_lr=0.05, local_steps=5)
+    assert float(_toy_loss(sst.params, batch)) < 0.5 * l0
+
+
+def test_deep_svrp_variance_reduction_effect(setup):
+    """On a *heterogeneous* two-cohort problem, SVRP's control variate should
+    let large local steps still track the global optimum better than FedAvg
+    with the same local schedule (the client-drift phenomenon)."""
+    params, (x, y) = setup
+    # two cohorts with systematically different data
+    batch_a = (x + 1.5, y)
+    batch_b = (x - 1.5, y)
+
+    def global_loss(p):
+        return 0.5 * (_toy_loss(p, batch_a) + _toy_loss(p, batch_b))
+
+    cfg = DeepSVRPConfig(eta=0.5, local_lr=0.1, local_steps=10, anchor_prob=0.5)
+
+    # simulate 2 cohorts by alternating local work then averaging manually
+    def svrp_sim(rounds):
+        g0 = jax.grad(global_loss)(params)
+        s = deep_svrp_init(params, g0, jax.random.key(3))
+        for _ in range(rounds):
+            sa, _ = deep_svrp_round(_toy_loss, s, batch_a, cfg)
+            sb, _ = deep_svrp_round(_toy_loss, s, batch_b, cfg)
+            mean_params = jax.tree.map(lambda a, b: 0.5 * (a + b), sa.params, sb.params)
+            gbar = jax.grad(global_loss)(mean_params)
+            s = s._replace(params=mean_params, anchor=mean_params, anchor_grad=gbar,
+                           step=s.step + 1)
+        return float(global_loss(s.params))
+
+    def fedavg_sim(rounds):
+        st = FedAvgState(params=params, step=jnp.zeros((), jnp.int32))
+        for _ in range(rounds):
+            sa, _ = fedavg_round(_toy_loss, st, batch_a, local_lr=0.1, local_steps=10)
+            sb, _ = fedavg_round(_toy_loss, st, batch_b, local_lr=0.1, local_steps=10)
+            st = FedAvgState(
+                params=jax.tree.map(lambda a, b: 0.5 * (a + b), sa.params, sb.params),
+                step=st.step + 1,
+            )
+        return float(global_loss(st.params))
+
+    assert svrp_sim(25) <= fedavg_sim(25) * 1.05

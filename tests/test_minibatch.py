@@ -1,0 +1,60 @@
+"""Minibatch-client SVRP (beyond-paper extension, core/minibatch.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import run_svrp, run_svrp_minibatch, theorem2_stepsize
+from repro.problems import make_synthetic_quadratic
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_synthetic_quadratic(num_clients=32, dim=12, mu=1.0, L=400.0, delta=6.0, seed=4)
+
+
+def test_b1_matches_svrp_semantics(prob):
+    """b=1 is Algorithm 2 (same update law; different sampling stream is ok)."""
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    x_star = prob.minimizer()
+    eta = theorem2_stepsize(mu, delta)
+    r1 = run_svrp_minibatch(prob, jnp.zeros(prob.dim), x_star, eta=eta, p=1 / 32,
+                            batch_clients=1, num_steps=2500, key=jax.random.key(0))
+    r2 = run_svrp(prob, jnp.zeros(prob.dim), x_star, eta=eta, p=1 / 32,
+                  num_steps=2500, key=jax.random.key(0))
+    assert float(r1.dist_sq[-1]) < 1e-16 and float(r2.dist_sq[-1]) < 1e-16
+
+
+def test_minibatch_cuts_rounds_at_flat_comm(prob):
+    """The scaling law the DeepSVRP cohort design relies on: with eta*b and
+    p*b, rounds-to-eps drop ~b-fold while total comm stays within ~2x."""
+    M = prob.num_clients
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    eta1 = theorem2_stepsize(mu, delta)
+    x_star = prob.minimizer()
+    x0 = jnp.zeros(prob.dim)
+    eps = 1e-12
+
+    def rounds_comm(b):
+        res = run_svrp_minibatch(prob, x0, x_star, eta=eta1 * b, p=min(b / M, 1.0),
+                                 batch_clients=b, num_steps=3000, key=jax.random.key(1))
+        d2 = np.asarray(res.dist_sq)
+        hit = np.nonzero(d2 <= eps)[0]
+        assert len(hit), f"b={b} did not reach eps"
+        return int(hit[0]) + 1, int(np.asarray(res.comm)[hit[0]])
+
+    r1, c1 = rounds_comm(1)
+    r8, c8 = rounds_comm(8)
+    assert r8 < r1 / 3, (r1, r8)
+    assert c8 < 2.5 * c1, (c1, c8)
+
+
+def test_comm_accounting(prob):
+    x_star = prob.minimizer()
+    res = run_svrp_minibatch(prob, jnp.zeros(prob.dim), x_star, eta=0.01, p=0.0,
+                             batch_clients=4, num_steps=50, key=jax.random.key(2))
+    # p=0: exactly 2b per round after the 3M setup
+    comm = np.asarray(res.comm) - 3 * prob.num_clients
+    np.testing.assert_array_equal(comm, 8 * np.arange(1, 51))

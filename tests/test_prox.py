@@ -1,0 +1,64 @@
+"""Proximal machinery: contraction (Fact 2), approximate solvers (Alg 7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prox_gd, prox_agd, gd_steps_for_accuracy
+from repro.problems import make_synthetic_quadratic
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_synthetic_quadratic(num_clients=10, dim=8, mu=2.0, L=60.0, delta=4.0, seed=1)
+
+
+@settings(deadline=None, max_examples=20)
+@given(eta=st.floats(0.01, 10.0), seed=st.integers(0, 1000))
+def test_prox_contraction_fact2(eta, seed):
+    """Fact 2: ||prox(x) - prox(y)|| <= ||x - y|| / (1 + eta mu)."""
+    prob = make_synthetic_quadratic(num_clients=5, dim=6, mu=2.0, L=30.0, delta=3.0, seed=0)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(6))
+    y = jnp.asarray(rng.standard_normal(6))
+    m = jnp.asarray(seed % 5)
+    lhs = jnp.linalg.norm(prob.prox(m, x, eta) - prob.prox(m, y, eta))
+    rhs = jnp.linalg.norm(x - y) / (1.0 + eta * 2.0)
+    assert float(lhs) <= float(rhs) * (1 + 1e-8)
+
+
+def test_prox_inverse_property(prob):
+    """Fact 1: prox_{eta h}(x + eta grad h(x)) == x."""
+    x = jnp.linspace(-1, 1, 8)
+    m = jnp.asarray(3)
+    eta = 0.7
+    z = x + eta * prob.grad(m, x)
+    np.testing.assert_allclose(np.asarray(prob.prox(m, z, eta)), np.asarray(x), atol=1e-9)
+
+
+def test_prox_gd_reaches_requested_accuracy(prob):
+    """Algorithm 7 with the static step count from its linear rate."""
+    z = jnp.ones(8) * 2.0
+    eta, b = 0.5, 1e-10
+    m = jnp.asarray(2)
+    exact = prob.prox(m, z, eta)
+    L = float(prob.smoothness_max())
+    r0 = float(jnp.sum((z - exact) ** 2))
+    steps = gd_steps_for_accuracy(eta, L, 2.0, b, max(r0, 1e-12))
+    approx = prox_gd(lambda y: prob.grad(m, y), z, eta, L, steps)
+    assert float(jnp.sum((approx - exact) ** 2)) <= b * 10
+
+
+def test_prox_agd_faster_than_gd(prob):
+    z = jnp.ones(8) * 2.0
+    eta = 2.0  # weak prox regularization -> conditioning matters
+    m = jnp.asarray(0)
+    exact = prob.prox(m, z, eta)
+    L = float(prob.smoothness_max())
+    steps = 40
+    gd = prox_gd(lambda y: prob.grad(m, y), z, eta, L, steps)
+    agd = prox_agd(lambda y: prob.grad(m, y), z, eta, L, 2.0, steps)
+    err_gd = float(jnp.sum((gd - exact) ** 2))
+    err_agd = float(jnp.sum((agd - exact) ** 2))
+    assert err_agd < err_gd

@@ -1,0 +1,67 @@
+"""Input-shape specs and long-context config resolution (deliverables e/f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, REGISTRY, input_specs, shape_supported
+from repro.configs.shapes import LONG_CONTEXT_WINDOW, cache_specs, resolve_config
+
+
+def test_the_four_shapes_exact():
+    assert INPUT_SHAPES["train_4k"] == ("train_4k", 4096, 256, "train")
+    assert INPUT_SHAPES["prefill_32k"] == ("prefill_32k", 32768, 32, "prefill")
+    assert INPUT_SHAPES["decode_32k"] == ("decode_32k", 32768, 128, "decode")
+    assert INPUT_SHAPES["long_500k"] == ("long_500k", 524288, 1, "decode")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_input_specs_are_abstract(arch, shape):
+    cfg = REGISTRY[arch]
+    ok, reason = shape_supported(cfg, shape)
+    if not ok:
+        assert arch == "seamless-m4t-large-v2" and shape == "long_500k"
+        return
+    specs = input_specs(cfg, shape)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)  # zero allocation
+    sh = INPUT_SHAPES[shape]
+    if sh.kind in ("train", "prefill"):
+        total = specs["tokens"].shape[1] + (
+            specs["patches"].shape[1] if "patches" in specs else 0
+        )
+        assert specs["tokens"].shape[0] == sh.global_batch
+        assert total == sh.seq_len
+    else:
+        assert specs["token"].shape == (sh.global_batch,)
+
+
+def test_long_context_resolution():
+    dense = REGISTRY["llama3.2-3b"]
+    lc = resolve_config(dense, "long_500k")
+    assert lc.sliding_window == LONG_CONTEXT_WINDOW
+    # SSM family needs no window
+    assert resolve_config(REGISTRY["rwkv6-1.6b"], "long_500k").sliding_window is None
+    # other shapes untouched
+    assert resolve_config(dense, "train_4k").sliding_window is None
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "rwkv6-1.6b", "zamba2-2.7b"])
+def test_cache_specs_bounded_for_long_context(arch):
+    """long_500k caches must be O(window)/O(state), never O(seq)."""
+    cfg = REGISTRY[arch]
+    specs = cache_specs(cfg, "long_500k")
+    total = sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(specs)
+    )
+    # absolute bound: far below a full 524288-token cache
+    full_kv = (
+        cfg.num_layers * 524288 * cfg.num_kv_heads * (cfg.head_dim or 64) * 2 * 2
+    )
+    assert total < 0.1 * full_kv, (arch, total, full_kv)
+
+
+def test_reduced_configs_meet_smoke_constraints():
+    for arch in ARCH_IDS:
+        r = REGISTRY[arch].reduced()
+        assert r.num_layers == 2 and r.d_model <= 512 and r.num_experts <= 4

@@ -1,0 +1,94 @@
+"""Theorem 2: SVRP — linear convergence, communication accounting, and the
+paper's headline comparison (comm-efficiency vs L-dependent methods)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import run_svrg, run_svrp, theorem2_rate, theorem2_stepsize
+from repro.problems import make_a9a_like_problem, make_synthetic_quadratic
+
+
+@pytest.fixture(scope="module")
+def prob():
+    # delta << sqrt(L mu): SVRP's favorable regime
+    return make_synthetic_quadratic(num_clients=40, dim=12, mu=1.0, L=800.0, delta=6.0, seed=2)
+
+
+def test_svrp_linear_convergence_to_machine_precision(prob):
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    x_star = prob.minimizer()
+    res = run_svrp(prob, jnp.zeros(prob.dim), x_star, eta=theorem2_stepsize(mu, delta),
+                   p=1 / 40, num_steps=4000, key=jax.random.key(0))
+    assert float(res.dist_sq[-1]) < 1e-20  # far below any noise floor: linear rate
+
+
+def test_svrp_rate_matches_theorem2(prob):
+    """Empirical contraction over a window should beat the theoretical
+    per-iteration factor (1 - tau) from Theorem 2 on average."""
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    M = prob.num_clients
+    tau = theorem2_rate(mu, delta, M)
+    x_star = prob.minimizer()
+    res = run_svrp(prob, jnp.ones(prob.dim), x_star, eta=theorem2_stepsize(mu, delta),
+                   p=1 / M, num_steps=3000, key=jax.random.key(1))
+    d = np.asarray(res.dist_sq)
+    d = d[d > 1e-24]
+    k0, k1 = 100, len(d) - 1
+    emp_rate = (d[k1] / d[k0]) ** (1.0 / (k1 - k0))
+    assert emp_rate <= (1.0 - tau) + 0.01, (emp_rate, 1 - tau)
+
+
+def test_svrp_comm_accounting_expectation(prob):
+    """E[comm/iter] = 2 + 3pM (+ 3M setup)."""
+    M = prob.num_clients
+    p = 1.0 / M
+    x_star = prob.minimizer()
+    res = run_svrp(prob, jnp.zeros(prob.dim), x_star, eta=0.01, p=p, num_steps=5000,
+                   key=jax.random.key(3))
+    per_iter = (float(res.comm[-1]) - 3 * M) / 5000
+    assert abs(per_iter - (2 + 3 * p * M)) < 0.6  # Bernoulli noise
+
+
+def test_svrp_beats_svrg_in_communication(prob):
+    """Fig. 1's claim: at equal accuracy SVRP needs far fewer comm steps when
+    delta << sqrt(L mu)."""
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    L = float(prob.smoothness_max())
+    M = prob.num_clients
+    x_star = prob.minimizer()
+    x0 = jnp.zeros(prob.dim)
+    eps = 1e-10
+    res_p = run_svrp(prob, x0, x_star, eta=theorem2_stepsize(mu, delta), p=1 / M,
+                     num_steps=6000, key=jax.random.key(0))
+    res_g = run_svrg(prob, x0, x_star, stepsize=1 / (6 * L), p=1 / M,
+                     num_steps=60_000, key=jax.random.key(0))
+    c_p = float(res_p.comm_to_accuracy(eps))
+    c_g = float(res_g.comm_to_accuracy(eps))
+    assert c_p < c_g / 3, (c_p, c_g)
+
+
+def test_svrp_on_nonquadratic(prob):
+    """The 'Non-quadratic? YES' column of Table 1: logistic regression."""
+    lp = make_a9a_like_problem(num_clients=8, n_per_client=300, n_pool=2000, lam=0.1, seed=1)
+    x_star = lp.minimizer(steps=40)
+    res = run_svrp(lp, jnp.zeros(lp.dim), x_star, eta=2.0, p=1 / 8, num_steps=500,
+                   key=jax.random.key(0))
+    assert float(res.dist_sq[-1]) < 1e-16
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 100), M=st.integers(5, 25))
+def test_svrp_converges_for_random_instances(seed, M):
+    """Property: Theorem 2's parameter rule converges on every instance."""
+    p = make_synthetic_quadratic(num_clients=M, dim=6, mu=1.0, L=120.0, delta=4.0, seed=seed)
+    mu = float(p.strong_convexity())
+    delta = float(p.similarity())
+    x_star = p.minimizer()
+    res = run_svrp(p, jnp.zeros(6), x_star, eta=theorem2_stepsize(mu, delta), p=1 / M,
+                   num_steps=1500, key=jax.random.key(seed))
+    assert float(res.dist_sq[-1]) < 1e-8 * max(float(res.dist_sq[0]), 1.0)
