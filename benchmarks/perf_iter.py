@@ -15,12 +15,10 @@ os.environ["XLA_FLAGS"] = (
 import argparse
 import json
 
-import jax  # noqa: E402
-
 from repro.launch import roofline as rl  # noqa: E402
 from repro.launch.dryrun import lower_combo  # noqa: E402
 from repro.configs import get_config  # noqa: E402
-from repro.configs.shapes import INPUT_SHAPES, resolve_config  # noqa: E402
+from repro.configs.shapes import resolve_config  # noqa: E402
 
 
 def measure(arch: str, shape: str, train_mode: str = "svrp", svrp=None):
@@ -81,7 +79,6 @@ def main():
 
         _shard.set_activation_mode("seq")
 
-    from repro.core.deep import DeepSVRPConfig
     from repro.launch.dryrun import DEFAULT_SVRP
     import dataclasses as _dc
 

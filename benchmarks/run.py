@@ -65,6 +65,13 @@ def main() -> None:
         print(f"deep_fed/{name},{us:.0f},{derived}")
     sys.stdout.flush()
 
+    # ---- batched sweep engine vs per-trial python loop ---------------------
+    from benchmarks import sweep_bench
+
+    for name, us, derived in sweep_bench.run(quick=quick):
+        print(f"sweep/{name},{us:.0f},{derived}")
+    sys.stdout.flush()
+
     # ---- beyond-paper: client-minibatch scaling ----------------------------
     from benchmarks import minibatch_sweep
 

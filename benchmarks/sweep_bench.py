@@ -1,0 +1,92 @@
+"""Batched sweep engine vs the per-trial Python loop it replaced.
+
+The pre-engine benchmarks (fig1, minibatch_sweep) drove `run_svrp`/`run_sppm`
+one trial at a time from Python — one full scan execution per (seed, eta)
+combo, leaving the device idle on these tiny bandwidth-bound problems.
+`repro.experiments.run_batch` runs the whole sweep as ONE vmapped jitted scan.
+
+Four timings per algorithm (all warm, compile excluded; cold compile reported
+separately):
+
+* loop/exact      — the old path: per-trial jitted scan, LU prox
+* loop/spectral   — per-trial scan with the hoisted-eigendecomposition prox
+* batch/exact     — run_batch, LU prox (vmapped LAPACK still serializes on CPU)
+* batch/spectral  — run_batch + spectral prox: the engine's fast path
+
+Headline = loop/exact vs batch/spectral (what the benchmarks used to do vs
+what they do now).  Acceptance floor: >= 5x at B >= 32 on CPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import theorem2_stepsize
+from repro.experiments import run_batch, run_sequential
+from repro.problems import make_synthetic_quadratic
+
+
+def _timed(fn):
+    """(cold_seconds, warm_seconds) — first call includes compile."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return cold, time.perf_counter() - t0
+
+
+def run(quick: bool = False):
+    M, dim = 32, 16
+    num_steps = 400 if quick else 1000
+    n_seeds = 8 if quick else 16
+    prob = make_synthetic_quadratic(num_clients=M, dim=dim, mu=1.0, L=400.0,
+                                    delta=6.0, seed=0)
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    eta = theorem2_stepsize(mu, delta)
+    grid = {"eta": [eta, eta / 2, 2 * eta, eta / 4], "p": 1 / M}
+    B = 4 * n_seeds
+
+    variants = {
+        "loop/exact": lambda: run_sequential(
+            "svrp", prob, grid=grid, seeds=n_seeds, num_steps=num_steps
+        ).dist_sq,
+        "loop/spectral": lambda: run_sequential(
+            "svrp", prob, grid=grid, seeds=n_seeds, num_steps=num_steps,
+            prox_solver="spectral",
+        ).dist_sq,
+        "batch/exact": lambda: run_batch(
+            "svrp", prob, grid=grid, seeds=n_seeds, num_steps=num_steps
+        ).dist_sq,
+        "batch/spectral": lambda: run_batch(
+            "svrp", prob, grid=grid, seeds=n_seeds, num_steps=num_steps,
+            prox_solver="spectral",
+        ).dist_sq,
+    }
+
+    rows = []
+    warm = {}
+    for name, fn in variants.items():
+        cold, w = _timed(fn)
+        warm[name] = w
+        rows.append((f"svrp_{name}_B{B}", w * 1e6,
+                     f"steps={num_steps};cold_s={cold:.2f}"))
+
+    headline = warm["loop/exact"] / warm["batch/spectral"]
+    rows.append((
+        f"svrp_speedup_B{B}", warm["batch/spectral"] * 1e6,
+        f"batch_spectral_vs_loop_exact={headline:.1f}x;"
+        f"vs_loop_spectral={warm['loop/spectral'] / warm['batch/spectral']:.1f}x;"
+        f"batch_exact_vs_loop_exact={warm['loop/exact'] / warm['batch/exact']:.1f}x",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run(quick=True):
+        print(f"{name},{us:.0f},{derived}")

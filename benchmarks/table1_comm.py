@@ -13,7 +13,6 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (
     run_acc_extragradient,

@@ -19,7 +19,6 @@ Skips (see DESIGN.md §5):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple
 
 import jax

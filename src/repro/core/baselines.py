@@ -9,6 +9,10 @@ server<->one client = 1 step):
   control payloads ride along, counted per-exchange like the paper's convention)
 * DANE/SONATA surrogate minimization               — 2M + 2 / round
 * Accelerated Extragradient sliding (Kovalev 2022) — 4M + 2 / round
+
+Each stochastic baseline exposes a pure `*_scan(problem, x0, x_star, key,
+hparams)` step-scan (traced hyperparameters, vmap-safe) for the batched
+experiment engine, plus the original jitted `run_*` wrapper.
 """
 from __future__ import annotations
 
@@ -22,9 +26,13 @@ from repro.core.types import RunResult
 
 
 # --------------------------------------------------------------------------- SGD
-@partial(jax.jit, static_argnames=("num_steps",))
-def run_sgd(problem, x0, x_star, *, stepsize, num_steps: int, key) -> RunResult:
+class SGDParams(NamedTuple):
+    stepsize: jax.Array
+
+
+def sgd_scan(problem, x0, x_star, key, hp: SGDParams, *, num_steps: int) -> RunResult:
     M = problem.num_clients
+    stepsize = jnp.asarray(hp.stepsize, x0.dtype)
 
     def step(carry, key_k):
         x, comm = carry
@@ -38,7 +46,18 @@ def run_sgd(problem, x0, x_star, *, stepsize, num_steps: int, key) -> RunResult:
     return RunResult(d2s, comms, x_fin)
 
 
+@partial(jax.jit, static_argnames=("num_steps",))
+def run_sgd(problem, x0, x_star, *, stepsize, num_steps: int, key) -> RunResult:
+    return sgd_scan(problem, x0, x_star, key, SGDParams(jnp.asarray(stepsize)),
+                    num_steps=num_steps)
+
+
 # ------------------------------------------------------------------- loopless SVRG
+class SVRGParams(NamedTuple):
+    stepsize: jax.Array
+    p: jax.Array
+
+
 class _SVRGState(NamedTuple):
     x: jax.Array
     w: jax.Array
@@ -46,10 +65,11 @@ class _SVRGState(NamedTuple):
     comm: jax.Array
 
 
-@partial(jax.jit, static_argnames=("num_steps",))
-def run_svrg(problem, x0, x_star, *, stepsize, p, num_steps: int, key) -> RunResult:
+def svrg_scan(problem, x0, x_star, key, hp: SVRGParams, *, num_steps: int) -> RunResult:
     """L-SVRG: x_{k+1} = x_k - gamma (grad f_m(x_k) - grad f_m(w_k) + grad f(w_k))."""
     M = problem.num_clients
+    stepsize = jnp.asarray(hp.stepsize, x0.dtype)
+    p = jnp.asarray(hp.p, x0.dtype)
     init = _SVRGState(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
 
     def step(s: _SVRGState, key_k):
@@ -71,7 +91,18 @@ def run_svrg(problem, x0, x_star, *, stepsize, p, num_steps: int, key) -> RunRes
     return RunResult(d2s, comms, fin.x)
 
 
+@partial(jax.jit, static_argnames=("num_steps",))
+def run_svrg(problem, x0, x_star, *, stepsize, p, num_steps: int, key) -> RunResult:
+    hp = SVRGParams(jnp.asarray(stepsize), jnp.asarray(p))
+    return svrg_scan(problem, x0, x_star, key, hp, num_steps=num_steps)
+
+
 # ---------------------------------------------------------------------- SCAFFOLD
+class ScaffoldParams(NamedTuple):
+    local_lr: jax.Array
+    global_lr: jax.Array
+
+
 class _ScaffoldState(NamedTuple):
     x: jax.Array
     c_server: jax.Array
@@ -79,21 +110,14 @@ class _ScaffoldState(NamedTuple):
     comm: jax.Array
 
 
-@partial(jax.jit, static_argnames=("num_rounds", "local_steps"))
-def run_scaffold(
-    problem,
-    x0,
-    x_star,
-    *,
-    local_lr,
-    global_lr,
-    local_steps: int,
-    num_rounds: int,
-    key,
+def scaffold_scan(
+    problem, x0, x_star, key, hp: ScaffoldParams, *, num_rounds: int, local_steps: int
 ) -> RunResult:
     """SCAFFOLD with client sampling (one client per round), Option II variates."""
     M = problem.num_clients
     d = x0.shape[0]
+    local_lr = jnp.asarray(hp.local_lr, x0.dtype)
+    global_lr = jnp.asarray(hp.global_lr, x0.dtype)
     init = _ScaffoldState(
         x=x0,
         c_server=jnp.zeros_like(x0),
@@ -124,6 +148,23 @@ def run_scaffold(
     return RunResult(d2s, comms, fin.x)
 
 
+@partial(jax.jit, static_argnames=("num_rounds", "local_steps"))
+def run_scaffold(
+    problem,
+    x0,
+    x_star,
+    *,
+    local_lr,
+    global_lr,
+    local_steps: int,
+    num_rounds: int,
+    key,
+) -> RunResult:
+    hp = ScaffoldParams(jnp.asarray(local_lr), jnp.asarray(global_lr))
+    return scaffold_scan(problem, x0, x_star, key, hp,
+                         num_rounds=num_rounds, local_steps=local_steps)
+
+
 # ------------------------------------------- surrogate solvers (DANE / extragradient)
 def _surrogate_min(problem, s_idx, d_lin, y, theta):
     """argmin_x  f_s(x) + <d_lin, x> + theta/2 ||x - y||^2.
@@ -149,15 +190,21 @@ def _surrogate_min(problem, s_idx, d_lin, y, theta):
     return jax.lax.fori_loop(0, 25, body, y)
 
 
-@partial(jax.jit, static_argnames=("num_rounds",))
-def run_dane(problem, x0, x_star, *, theta, num_rounds: int, surrogate_client: int = 0) -> RunResult:
+class DANEParams(NamedTuple):
+    theta: jax.Array
+
+
+def dane_scan(
+    problem, x0, x_star, key, hp: DANEParams, *, num_rounds: int, surrogate_client: int = 0
+) -> RunResult:
     """DANE/SONATA-style surrogate minimization (full participation).
 
-    x_{t+1} = argmin_x f_s(x) + <grad f(y) - grad f_s(y), x> + theta/2||x-y||^2,
-    theta ~ delta gives the O~(delta/mu) round complexity of SONATA.
-    Comm: full gradient (2M) + surrogate exchange (2) per round.
+    Deterministic; `key` is accepted (and ignored) so the engine can treat all
+    algorithms uniformly.
     """
+    del key
     M = problem.num_clients
+    theta = jnp.asarray(hp.theta, x0.dtype)
     s_idx = jnp.asarray(surrogate_client)
 
     def round_(carry, _):
@@ -173,22 +220,29 @@ def run_dane(problem, x0, x_star, *, theta, num_rounds: int, surrogate_client: i
     return RunResult(d2s, comms, x_fin)
 
 
+@partial(jax.jit, static_argnames=("num_rounds",))
+def run_dane(problem, x0, x_star, *, theta, num_rounds: int, surrogate_client: int = 0) -> RunResult:
+    """x_{t+1} = argmin_x f_s(x) + <grad f(y) - grad f_s(y), x> + theta/2||x-y||^2,
+    theta ~ delta gives the O~(delta/mu) round complexity of SONATA.
+    Comm: full gradient (2M) + surrogate exchange (2) per round.
+    """
+    return dane_scan(problem, x0, x_star, None, DANEParams(jnp.asarray(theta)),
+                     num_rounds=num_rounds, surrogate_client=surrogate_client)
+
+
+class AccEGParams(NamedTuple):
+    theta: jax.Array
+    mu: jax.Array
+
+
 class _AccEGState(NamedTuple):
     x: jax.Array
     x_prev: jax.Array
     comm: jax.Array
 
 
-@partial(jax.jit, static_argnames=("num_rounds",))
-def run_acc_extragradient(
-    problem,
-    x0,
-    x_star,
-    *,
-    theta,
-    mu,
-    num_rounds: int,
-    surrogate_client: int = 0,
+def acc_extragradient_scan(
+    problem, x0, x_star, key, hp: AccEGParams, *, num_rounds: int, surrogate_client: int = 0
 ) -> RunResult:
     """Accelerated Extragradient sliding (Kovalev et al., 2022 family) — the
     strongest full-participation baseline under Assumption 1:
@@ -207,10 +261,13 @@ def run_acc_extragradient(
     the strongly-convex Nesterov coefficient for kappa = theta/mu.  Comm: two
     full-gradient rounds + surrogate exchange = 4M + 2 per round.
     (Empirically verified linear + accelerated on quadratics; see tests.)
+    Deterministic; `key` is accepted (and ignored) for engine uniformity.
     """
+    del key
     M = problem.num_clients
+    theta = jnp.asarray(hp.theta, x0.dtype)
     s_idx = jnp.asarray(surrogate_client)
-    kappa = jnp.maximum(theta / mu, 1.0)
+    kappa = jnp.maximum(theta / jnp.asarray(hp.mu, x0.dtype), 1.0)
     beta = (jnp.sqrt(kappa) - 1.0) / (jnp.sqrt(kappa) + 1.0)
 
     def gradp(x):
@@ -226,3 +283,19 @@ def run_acc_extragradient(
     init = _AccEGState(x0, x0, jnp.asarray(0))
     fin, (d2s, comms) = jax.lax.scan(round_, init, None, length=num_rounds)
     return RunResult(d2s, comms, fin.x)
+
+
+@partial(jax.jit, static_argnames=("num_rounds",))
+def run_acc_extragradient(
+    problem,
+    x0,
+    x_star,
+    *,
+    theta,
+    mu,
+    num_rounds: int,
+    surrogate_client: int = 0,
+) -> RunResult:
+    hp = AccEGParams(jnp.asarray(theta), jnp.asarray(mu))
+    return acc_extragradient_scan(problem, x0, x_star, None, hp,
+                                  num_rounds=num_rounds, surrogate_client=surrogate_client)

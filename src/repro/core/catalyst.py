@@ -9,17 +9,38 @@ using SVRP as the inner solver A, then extrapolates.  Theorem 3: with
 gamma = delta/sqrt(M) - mu (when delta/mu >= sqrt(M), else gamma = 0) the
 expected communication complexity is O~((M + sqrt(delta/mu) M^{3/4}) log 1/eps),
 uniformly better than SVRP and than all prior methods under Assumption 1.
+
+Two implementations:
+
+* `run_catalyst` — the generic host-side outer loop over ANY inner solver
+  callable (kept for extensibility; T is small).
+* `catalyzed_svrp_scan` — the whole method (outer extrapolation + inner SVRP
+  scans) as ONE nested lax.scan: pure `(problem, x0, x_star, key, hparams) ->
+  RunResult`, jit- and vmap-safe, so the batched experiment engine can sweep
+  (mu, gamma, eta, p) x seeds in a single compilation.  `run_catalyzed_svrp`
+  delegates to it with the proof's parameter choices.
 """
 from __future__ import annotations
 
 import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.svrp import run_svrp, theorem2_stepsize
+from repro.core.svrp import SVRPParams, run_svrp, svrp_scan, theorem2_stepsize
 from repro.core.types import RunResult
+
+
+class CatalyzedSVRPParams(NamedTuple):
+    """Traced per-trial hyperparameters (vmap axis of the experiment engine)."""
+
+    mu: jax.Array
+    gamma: jax.Array  # Catalyst smoothing; 0 disables acceleration (case b)
+    eta: jax.Array  # inner SVRP stepsize
+    p: jax.Array  # inner anchor-refresh probability
+    smoothness: jax.Array  # used only by the "gd" inner prox solver
 
 
 def theorem3_gamma(mu: float, delta: float, M: int) -> float:
@@ -37,6 +58,69 @@ def catalyst_inner_iterations(mu: float, delta: float, M: int, safety: float = 3
     s = (gamma + mu) ** 2
     tau = 0.5 * min(s / (delta**2 + s), 1.0 / M)
     return int(math.ceil(safety / tau))
+
+
+def catalyzed_svrp_scan(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    key: jax.Array,
+    hp: CatalyzedSVRPParams,
+    *,
+    num_outer: int,
+    inner_steps: int,
+    prox_solver: str = "exact",
+    prox_steps: int = 50,
+) -> RunResult:
+    """Catalyzed SVRP as a single nested scan (outer loop traced, not host-side).
+
+    The alpha_t extrapolation recurrence (alpha^2 = (1-alpha) alpha_{t-1}^2 +
+    q alpha) is computed in jnp so mu/gamma may be traced per-trial scalars.
+    Trajectories of all outer stages are concatenated with cumulative
+    communication offsets, matching the host-side implementation exactly.
+    """
+    mu = jnp.asarray(hp.mu, x0.dtype)
+    gamma = jnp.asarray(hp.gamma, x0.dtype)
+    q = mu / (mu + gamma)
+    inner_hp = SVRPParams(eta=hp.eta, p=hp.p, smoothness=hp.smoothness)
+    # The shifted problems A_m + gamma I share the base eigenvectors, so the
+    # spectral prox factors are computed ONCE here and shifted per stage —
+    # not re-factorized inside every outer scan iteration.
+    base_factors = problem.prox_factors() if prox_solver == "spectral" else None
+
+    def outer(carry, key_t):
+        x_prev, y_prev, alpha_prev, comm0 = carry
+        h_t = problem.shifted(gamma, y_prev)
+        pf = (base_factors[0] + gamma, base_factors[1]) if base_factors else None
+        # Distances are always measured to the ORIGINAL optimum.
+        res = svrp_scan(
+            h_t, x_prev, x_star, key_t, inner_hp,
+            num_steps=inner_steps, prox_solver=prox_solver, prox_steps=prox_steps,
+            prox_factors=pf,
+        )
+        x_t = res.x_final
+
+        # alpha_t solves alpha^2 = (1 - alpha) alpha_{t-1}^2 + q alpha.
+        ap2 = alpha_prev**2
+        alpha_t = 0.5 * ((q - ap2) + jnp.sqrt((q - ap2) ** 2 + 4.0 * ap2))
+        beta_t = alpha_prev * (1.0 - alpha_prev) / (ap2 + alpha_t)
+        y_t = x_t + beta_t * (x_t - x_prev)
+
+        comm = res.comm + comm0
+        return (x_t, y_t, alpha_t, comm[-1]), (res.dist_sq, comm)
+
+    keys = jax.random.split(key, num_outer)
+    init = (x0, x0, jnp.sqrt(q), jnp.asarray(0))
+    (x_fin, _, _, _), (d2s, comms) = jax.lax.scan(outer, init, keys)
+    return RunResult(
+        dist_sq=d2s.reshape(-1), comm=comms.reshape(-1), x_final=x_fin
+    )
+
+
+_catalyzed_svrp_jit = jax.jit(
+    catalyzed_svrp_scan,
+    static_argnames=("num_outer", "inner_steps", "prox_solver", "prox_steps"),
+)
 
 
 def run_catalyst(
@@ -116,6 +200,42 @@ def run_catalyzed_svrp(
         p = 1.0 / M
 
     eta_inner = theorem2_stepsize(mu + gamma, delta)  # eta = (mu+gamma)/(2 delta^2)
+    hp = CatalyzedSVRPParams(
+        mu=jnp.asarray(mu),
+        gamma=jnp.asarray(gamma),
+        eta=jnp.asarray(eta_inner),
+        p=jnp.asarray(p),
+        smoothness=jnp.asarray(0.0),
+    )
+    return _catalyzed_svrp_jit(
+        problem, x0, x_star, key, hp, num_outer=num_outer, inner_steps=inner_steps
+    )
+
+
+def run_catalyzed_svrp_host(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    mu: float,
+    delta: float,
+    num_outer: int,
+    key: jax.Array,
+    gamma: float | None = None,
+    inner_steps: int | None = None,
+    p: float | None = None,
+) -> RunResult:
+    """Host-loop reference implementation (pre-engine behavior), kept for
+    equivalence testing against `catalyzed_svrp_scan`."""
+    M = problem.num_clients
+    if gamma is None:
+        gamma = theorem3_gamma(mu, delta, M)
+    if inner_steps is None:
+        inner_steps = catalyst_inner_iterations(mu, delta, M)
+    if p is None:
+        p = 1.0 / M
+
+    eta_inner = theorem2_stepsize(mu + gamma, delta)
 
     def solver(h_t, x_init, x_star_, key_):
         return run_svrp(

@@ -17,6 +17,10 @@ iteration count falls roughly like 1/b while comm/round grows like b, so the
 total communication stays flat while WALL-CLOCK rounds drop b-fold — the
 datacenter regime where parallel clients are free, which is exactly the
 argument for the DeepSVRP cohort design (DESIGN.md §4).
+
+`svrp_minibatch_scan` is the vmap-safe step-scan (eta/p traced, cohort size
+static) used by the batched experiment engine; `run_svrp_minibatch` is the
+jitted float-argument wrapper.
 """
 from __future__ import annotations
 
@@ -29,6 +33,13 @@ import jax.numpy as jnp
 from repro.core.types import RunResult
 
 
+class MinibatchParams(NamedTuple):
+    """Traced per-trial hyperparameters (vmap axis of the experiment engine)."""
+
+    eta: jax.Array
+    p: jax.Array
+
+
 class _State(NamedTuple):
     x: jax.Array
     w: jax.Array
@@ -36,21 +47,29 @@ class _State(NamedTuple):
     comm: jax.Array
 
 
-@partial(jax.jit, static_argnames=("num_steps", "batch_clients"))
-def run_svrp_minibatch(
+def svrp_minibatch_scan(
     problem,
     x0: jax.Array,
     x_star: jax.Array,
-    *,
-    eta: float,
-    p: float,
-    batch_clients: int,
-    num_steps: int,
     key: jax.Array,
+    hp: MinibatchParams,
+    *,
+    num_steps: int,
+    batch_clients: int,
+    prox_solver: str = "exact",
 ) -> RunResult:
-    """SVRP with b = batch_clients sampled clients per round (exact prox)."""
+    """SVRP with b = batch_clients sampled clients per round.
+
+    `prox_solver`: "exact" (problem.prox) or "spectral" (hoisted
+    eigendecomposition; quadratics only — see svrp_scan).
+    """
     M = problem.num_clients
     b = batch_clients
+    eta = jnp.asarray(hp.eta, x0.dtype)
+    p = jnp.asarray(hp.p, x0.dtype)
+    if prox_solver not in ("exact", "spectral"):
+        raise ValueError(prox_solver)
+    factors = problem.prox_factors() if prox_solver == "spectral" else None
     init = _State(x=x0, w=x0, gbar=problem.full_grad(x0), comm=jnp.asarray(3 * M))
 
     def step(s: _State, key_k):
@@ -59,7 +78,10 @@ def run_svrp_minibatch(
 
         def one_client(m):
             g_k = s.gbar - problem.grad(m, s.w)
-            return problem.prox(m, s.x - eta * g_k, eta)
+            z = s.x - eta * g_k
+            if prox_solver == "spectral":
+                return problem.prox_spectral(m, z, eta, factors)
+            return problem.prox(m, z, eta)
 
         ys = jax.vmap(one_client)(ms)  # (b, d)
         x_next = jnp.mean(ys, axis=0)
@@ -76,3 +98,22 @@ def run_svrp_minibatch(
     keys = jax.random.split(key, num_steps)
     fin, (d2s, comms) = jax.lax.scan(step, init, keys)
     return RunResult(d2s, comms, fin.x)
+
+
+@partial(jax.jit, static_argnames=("num_steps", "batch_clients"))
+def run_svrp_minibatch(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    eta: float,
+    p: float,
+    batch_clients: int,
+    num_steps: int,
+    key: jax.Array,
+) -> RunResult:
+    hp = MinibatchParams(eta=jnp.asarray(eta), p=jnp.asarray(p))
+    return svrp_minibatch_scan(
+        problem, x0, x_star, key, hp,
+        num_steps=num_steps, batch_clients=batch_clients,
+    )

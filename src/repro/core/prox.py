@@ -7,7 +7,6 @@ functions over a client's gradient oracle so the same code runs inside lax.scan
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
@@ -34,6 +33,47 @@ def prox_gd(
 
     def body(_, y):
         return y - beta * (grad_fn(y) + (y - z) / eta)
+
+    return jax.lax.fori_loop(0, num_steps, body, y_init)
+
+
+def prox_gd_batched(
+    grad_fn: Callable[[jax.Array], jax.Array],
+    z: jax.Array,
+    eta: jax.Array,
+    L: jax.Array,
+    num_steps: int,
+    y0: jax.Array | None = None,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Algorithm 7 across a whole sweep batch at once.
+
+    `z`: `(B, d)` prox targets; `eta`, `L`: per-trial `(B,)` scalars (or
+    broadcastable); `grad_fn` maps `(B, d) -> (B, d)` (trial b's client
+    gradient applied to row b).  With `use_kernel=True` the inner update runs
+    through the fused batched Pallas kernel (`kernels.prox_update_batched`) so
+    the bandwidth-bound `y - beta (g + (y - z)/eta)` stays one launch per GD
+    step for the entire sweep; otherwise it is the identical jnp expression.
+    """
+    B = z.shape[0]
+    eta = jnp.broadcast_to(jnp.asarray(eta, z.dtype), (B,))
+    L = jnp.broadcast_to(jnp.asarray(L, z.dtype), (B,))
+    beta = 1.0 / (L + 1.0 / eta)  # (B,)
+    inv_eta = 1.0 / eta
+    y_init = z if y0 is None else y0
+
+    if use_kernel:
+        from repro.kernels.prox_update import prox_update_batched
+
+        def body(_, y):
+            return prox_update_batched(y, grad_fn(y), z, beta, inv_eta, interpret=interpret)
+
+    else:
+
+        def body(_, y):
+            return y - beta[:, None] * (grad_fn(y) + (y - z) * inv_eta[:, None])
 
     return jax.lax.fori_loop(0, num_steps, body, y_init)
 

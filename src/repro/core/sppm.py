@@ -5,16 +5,64 @@ SPPM reaches E||x_K - x_*||^2 <= eps in
     K = (1 + 2 sigma_*^2 / (mu^2 eps)) log(4 ||x0 - x_*||^2 / eps)
 iterations — independent of the smoothness constant L (unlike SGD, eq. (4)).
 Each iteration costs 2 communication steps (send x_k, receive x_{k+1}).
+
+`sppm_scan` is the pure vmap-safe step-scan (traced hyperparameters in
+`SPPMParams`, static prox-solver dispatch) consumed by the batched experiment
+engine; `run_sppm` is the jitted float-argument wrapper.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.prox import prox_gd
 from repro.core.types import RunResult
+
+
+class SPPMParams(NamedTuple):
+    """Traced per-trial hyperparameters (vmap axis of the experiment engine)."""
+
+    eta: jax.Array
+    smoothness: jax.Array  # per-client L, used only by the "gd" local solver
+
+
+def sppm_scan(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    key: jax.Array,
+    hp: SPPMParams,
+    *,
+    num_steps: int,
+    prox_solver: str = "exact",  # "exact" (problem.prox) or "gd" (Algorithm 7)
+    prox_steps: int = 50,
+) -> RunResult:
+    M = problem.num_clients
+    eta = jnp.asarray(hp.eta, x0.dtype)
+    factors = problem.prox_factors() if prox_solver == "spectral" else None
+
+    def step(carry, key_k):
+        x, comm = carry
+        m = jax.random.randint(key_k, (), 0, M)
+        z = x
+        if prox_solver == "exact":
+            x_next = problem.prox(m, z, eta)
+        elif prox_solver == "spectral":
+            x_next = problem.prox_spectral(m, z, eta, factors)
+        elif prox_solver == "gd":
+            x_next = prox_gd(lambda y: problem.grad(m, y), z, eta, hp.smoothness, prox_steps)
+        else:
+            raise ValueError(prox_solver)
+        comm = comm + 2  # server -> client (x_k), client -> server (x_{k+1})
+        d2 = jnp.sum((x_next - x_star) ** 2)
+        return (x_next, comm), (d2, comm)
+
+    keys = jax.random.split(key, num_steps)
+    (x_fin, _), (d2s, comms) = jax.lax.scan(step, (x0, jnp.asarray(0)), keys)
+    return RunResult(dist_sq=d2s, comm=comms, x_final=x_fin)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "prox_solver", "prox_steps"))
@@ -26,29 +74,20 @@ def run_sppm(
     eta: float,
     num_steps: int,
     key: jax.Array,
-    prox_solver: str = "exact",  # "exact" (problem.prox) or "gd" (Algorithm 7)
+    prox_solver: str = "exact",
     prox_steps: int = 50,
     smoothness: float | None = None,
 ) -> RunResult:
-    M = problem.num_clients
-
-    def step(carry, key_k):
-        x, comm = carry
-        m = jax.random.randint(key_k, (), 0, M)
-        z = x
-        if prox_solver == "exact":
-            x_next = problem.prox(m, z, eta)
-        elif prox_solver == "gd":
-            x_next = prox_gd(lambda y: problem.grad(m, y), z, eta, smoothness, prox_steps)
-        else:
-            raise ValueError(prox_solver)
-        comm = comm + 2  # server -> client (x_k), client -> server (x_{k+1})
-        d2 = jnp.sum((x_next - x_star) ** 2)
-        return (x_next, comm), (d2, comm)
-
-    keys = jax.random.split(key, num_steps)
-    (x_fin, _), (d2s, comms) = jax.lax.scan(step, (x0, jnp.asarray(0)), keys)
-    return RunResult(dist_sq=d2s, comm=comms, x_final=x_fin)
+    if prox_solver == "gd" and smoothness is None:
+        raise ValueError("prox_solver='gd' requires smoothness=L (Algorithm 7 stepsize)")
+    hp = SPPMParams(
+        eta=jnp.asarray(eta),
+        smoothness=jnp.asarray(0.0 if smoothness is None else smoothness),
+    )
+    return sppm_scan(
+        problem, x0, x_star, key, hp,
+        num_steps=num_steps, prox_solver=prox_solver, prox_steps=prox_steps,
+    )
 
 
 def theorem1_iterations(sigma_star_sq: float, mu: float, eps: float, r0_sq: float) -> float:

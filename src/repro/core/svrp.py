@@ -14,6 +14,12 @@ Communication accounting (Section 4.2): each iteration exchanges x_k down and
 x_{k+1} up with ONE sampled client (2 steps); an anchor refresh additionally
 broadcasts w_{k+1} to all M clients, gathers M local gradients and broadcasts
 the averaged grad f(w_{k+1}) back — 3M steps, so E[comm/iter] = 2 + 3 p M.
+
+Layering: `svrp_scan` is the pure `(problem, x0, x_star, key, hparams) ->
+RunResult` step-scan — vmap-safe (all hyperparameters are traced scalars in
+`SVRPParams`; the prox-solver dispatch is static) — used by the batched
+experiment engine (`repro.experiments`).  `run_svrp` is the jitted
+float-argument wrapper the paper-faithful tests and benchmarks call.
 """
 from __future__ import annotations
 
@@ -27,11 +33,85 @@ from repro.core.prox import prox_gd
 from repro.core.types import RunResult
 
 
+class SVRPParams(NamedTuple):
+    """Traced per-trial hyperparameters (vmap axis of the experiment engine)."""
+
+    eta: jax.Array  # prox stepsize
+    p: jax.Array  # anchor-refresh probability
+    smoothness: jax.Array  # per-client L, used only by the "gd" local solver
+
+
 class SVRPState(NamedTuple):
     x: jax.Array
     w: jax.Array
     gbar: jax.Array  # grad f(w), cached full gradient at the anchor
     comm: jax.Array
+
+
+def svrp_scan(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    key: jax.Array,
+    hp: SVRPParams,
+    *,
+    num_steps: int,
+    prox_solver: str = "exact",
+    prox_steps: int = 50,
+    prox_factors=None,
+) -> RunResult:
+    """One SVRP trajectory as a pure lax.scan. Safe under jit AND vmap: no
+    Python branching on traced values; `prox_solver` is static config:
+
+    * "exact"    — problem.prox (LU solve per step for quadratics)
+    * "spectral" — problem.prox_spectral with factors hoisted out of the scan
+      (quadratics only; one O(M d^3) eigh, then matvecs — the fast path the
+      batched engine sweeps with, since a per-step LAPACK solve serializes
+      over the vmap axis on CPU).  Callers that already hold the (lam, Q)
+      factors (e.g. Catalyst, whose shifted problems share Q) pass them via
+      `prox_factors` to skip the recomputation.
+    * "gd"       — Algorithm 7, `prox_steps` gradient steps at hp.smoothness
+    """
+    M = problem.num_clients
+    eta = jnp.asarray(hp.eta, x0.dtype)
+    p = jnp.asarray(hp.p, x0.dtype)
+    factors = prox_factors
+    if factors is None and prox_solver == "spectral":
+        factors = problem.prox_factors()
+
+    # Initial anchor setup costs one full-gradient round: server broadcasts w_0
+    # (M), clients return gradients (M), server broadcasts grad f(w_0) (M).
+    init = SVRPState(x=x0, w=x0, gbar=problem.full_grad(x0), comm=jnp.asarray(3 * M))
+
+    def step(state: SVRPState, key_k):
+        key_m, key_c = jax.random.split(key_k)
+        m = jax.random.randint(key_m, (), 0, M)
+
+        g_k = state.gbar - problem.grad(m, state.w)
+        z = state.x - eta * g_k
+        if prox_solver == "exact":
+            x_next = problem.prox(m, z, eta)
+        elif prox_solver == "spectral":
+            x_next = problem.prox_spectral(m, z, eta, factors)
+        elif prox_solver == "gd":
+            x_next = prox_gd(
+                lambda y: problem.grad(m, y), z, eta, hp.smoothness, prox_steps
+            )
+        else:
+            raise ValueError(prox_solver)
+
+        c = jax.random.bernoulli(key_c, p)
+        w_next = jnp.where(c, x_next, state.w)
+        # Lazy full gradient: only recomputed (and paid for) on refresh.
+        gbar_next = jax.lax.cond(c, lambda: problem.full_grad(w_next), lambda: state.gbar)
+        comm = state.comm + 2 + 3 * M * c.astype(jnp.int32)
+
+        d2 = jnp.sum((x_next - x_star) ** 2)
+        return SVRPState(x_next, w_next, gbar_next, comm), (d2, comm)
+
+    keys = jax.random.split(key, num_steps)
+    final, (d2s, comms) = jax.lax.scan(step, init, keys)
+    return RunResult(dist_sq=d2s, comm=comms, x_final=final.x)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "prox_solver", "prox_steps"))
@@ -48,37 +128,17 @@ def run_svrp(
     prox_steps: int = 50,
     smoothness: float | None = None,
 ) -> RunResult:
-    M = problem.num_clients
-
-    # Initial anchor setup costs one full-gradient round: server broadcasts w_0
-    # (M), clients return gradients (M), server broadcasts grad f(w_0) (M).
-    init = SVRPState(x=x0, w=x0, gbar=problem.full_grad(x0), comm=jnp.asarray(3 * M))
-
-    def step(state: SVRPState, key_k):
-        key_m, key_c = jax.random.split(key_k)
-        m = jax.random.randint(key_m, (), 0, M)
-
-        g_k = state.gbar - problem.grad(m, state.w)
-        z = state.x - eta * g_k
-        if prox_solver == "exact":
-            x_next = problem.prox(m, z, eta)
-        elif prox_solver == "gd":
-            x_next = prox_gd(lambda y: problem.grad(m, y), z, eta, smoothness, prox_steps)
-        else:
-            raise ValueError(prox_solver)
-
-        c = jax.random.bernoulli(key_c, p)
-        w_next = jnp.where(c, x_next, state.w)
-        # Lazy full gradient: only recomputed (and paid for) on refresh.
-        gbar_next = jax.lax.cond(c, lambda: problem.full_grad(w_next), lambda: state.gbar)
-        comm = state.comm + 2 + 3 * M * c.astype(jnp.int32)
-
-        d2 = jnp.sum((x_next - x_star) ** 2)
-        return SVRPState(x_next, w_next, gbar_next, comm), (d2, comm)
-
-    keys = jax.random.split(key, num_steps)
-    final, (d2s, comms) = jax.lax.scan(step, init, keys)
-    return RunResult(dist_sq=d2s, comm=comms, x_final=final.x)
+    if prox_solver == "gd" and smoothness is None:
+        raise ValueError("prox_solver='gd' requires smoothness=L (Algorithm 7 stepsize)")
+    hp = SVRPParams(
+        eta=jnp.asarray(eta),
+        p=jnp.asarray(p),
+        smoothness=jnp.asarray(0.0 if smoothness is None else smoothness),
+    )
+    return svrp_scan(
+        problem, x0, x_star, key, hp,
+        num_steps=num_steps, prox_solver=prox_solver, prox_steps=prox_steps,
+    )
 
 
 def theorem2_stepsize(mu: float, delta: float) -> float:

@@ -1,0 +1,26 @@
+"""Batched multi-trial experiment engine (seeds x hyperparameter sweeps).
+
+`run_batch` vmaps the paper-faithful `*_scan` drivers over a `(B,)` trial
+axis in a single jit; `run_sequential` is the per-trial Python loop it
+replaces (kept as the equivalence oracle and benchmark baseline).
+"""
+from repro.experiments.grid import expand_grid, grid_size, trial_labels, with_seeds
+from repro.experiments.runner import (
+    ALGOS,
+    AlgoSpec,
+    BatchResult,
+    run_batch,
+    run_sequential,
+)
+
+__all__ = [
+    "ALGOS",
+    "AlgoSpec",
+    "BatchResult",
+    "expand_grid",
+    "grid_size",
+    "run_batch",
+    "run_sequential",
+    "trial_labels",
+    "with_seeds",
+]

@@ -1,0 +1,466 @@
+"""Batched multi-trial experiment engine.
+
+Every figure/table in the paper averages SVRP/SPPM/Catalyzed-SVRP over many
+seeds and sweeps stepsizes/cohorts.  Driving `run_svrp` one trial at a time
+from Python recompiles nothing (hyperparameters are traced) but still pays one
+device dispatch per scan step per trial and leaves the device idle on these
+tiny bandwidth-bound problems.  `run_batch` instead vmaps the pure
+`*_scan(problem, x0, x_star, key, hparams)` drivers over a `(B,)` axis of
+seeds x hyperparameters and runs the WHOLE sweep as one jitted scan —
+compile once, batch every per-step linear solve / gradient across trials.
+
+    from repro.experiments import run_batch
+
+    res = run_batch(
+        "svrp", problem,
+        grid={"eta": [1e-3, 3e-3, 1e-2], "p": 1 / M},
+        seeds=8,
+        num_steps=2000,
+    )
+    res.dist_sq            # (24, 2000) per-trial trajectories
+    res.summary()          # median/IQR over the batch axis
+    res.trial(5)           # plain RunResult, bitwise-comparable to run_svrp
+
+Design rules enforced by the core refactor this engine relies on:
+
+* all per-trial hyperparameters are traced scalars carried in a NamedTuple
+  (`SVRPParams` etc.) — the vmap axis;
+* anything that changes trace structure (num_steps, prox-solver choice,
+  cohort size) is static config shared by the whole batch;
+* per-trial PRNG keys are built with `vmap(jax.random.key)`, so trial
+  `(seed=s)` reproduces `run_*(..., key=jax.random.key(s))` exactly.
+
+The `fused=True` path for the "gd" prox solver additionally hand-batches the
+scan state to `(B, d)` and routes the Algorithm-7 inner loop through the
+batched Pallas kernel (`kernels.prox_update_batched`), keeping the sweep's
+hot loop a single fused launch per GD step.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (
+    AccEGParams,
+    DANEParams,
+    ScaffoldParams,
+    SGDParams,
+    SVRGParams,
+    acc_extragradient_scan,
+    dane_scan,
+    scaffold_scan,
+    sgd_scan,
+    svrg_scan,
+)
+from repro.core.catalyst import CatalyzedSVRPParams, catalyzed_svrp_scan
+from repro.core.minibatch import MinibatchParams, svrp_minibatch_scan
+from repro.core.prox import prox_gd_batched
+from repro.core.sppm import SPPMParams, sppm_scan
+from repro.core.svrp import SVRPParams, svrp_scan
+from repro.core.types import RunResult
+from repro.experiments.grid import expand_grid, trial_labels, with_seeds
+
+_REQUIRED = object()
+
+
+@dataclass(frozen=True)
+class AlgoSpec:
+    """How the engine drives one algorithm.
+
+    `defaults` maps every hparam field of `params_cls` to its default value
+    (`_REQUIRED` = the caller's grid must provide it); `static` maps every
+    static-config kwarg of `scan_fn` likewise.
+    """
+
+    params_cls: type
+    scan_fn: Callable[..., RunResult]
+    defaults: Mapping[str, Any]
+    static: Mapping[str, Any]
+    fusable: bool = False  # has a hand-batched fused-kernel "gd" path
+    deterministic: bool = False  # ignores the PRNG key; run_batch rejects multi-seed sweeps
+
+
+_PROX_STATIC = {"num_steps": _REQUIRED, "prox_solver": "exact", "prox_steps": 50}
+
+ALGOS: dict[str, AlgoSpec] = {
+    "sppm": AlgoSpec(
+        SPPMParams, sppm_scan,
+        defaults={"eta": _REQUIRED, "smoothness": 0.0},
+        static=_PROX_STATIC, fusable=True,
+    ),
+    "svrp": AlgoSpec(
+        SVRPParams, svrp_scan,
+        defaults={"eta": _REQUIRED, "p": _REQUIRED, "smoothness": 0.0},
+        static=_PROX_STATIC, fusable=True,
+    ),
+    "svrp_minibatch": AlgoSpec(
+        MinibatchParams, svrp_minibatch_scan,
+        defaults={"eta": _REQUIRED, "p": _REQUIRED},
+        static={"num_steps": _REQUIRED, "batch_clients": _REQUIRED, "prox_solver": "exact"},
+    ),
+    "catalyzed_svrp": AlgoSpec(
+        CatalyzedSVRPParams, catalyzed_svrp_scan,
+        defaults={
+            "mu": _REQUIRED, "gamma": _REQUIRED, "eta": _REQUIRED,
+            "p": _REQUIRED, "smoothness": 0.0,
+        },
+        static={
+            "num_outer": _REQUIRED, "inner_steps": _REQUIRED,
+            "prox_solver": "exact", "prox_steps": 50,
+        },
+    ),
+    "sgd": AlgoSpec(
+        SGDParams, sgd_scan,
+        defaults={"stepsize": _REQUIRED},
+        static={"num_steps": _REQUIRED},
+    ),
+    "svrg": AlgoSpec(
+        SVRGParams, svrg_scan,
+        defaults={"stepsize": _REQUIRED, "p": _REQUIRED},
+        static={"num_steps": _REQUIRED},
+    ),
+    "scaffold": AlgoSpec(
+        ScaffoldParams, scaffold_scan,
+        defaults={"local_lr": _REQUIRED, "global_lr": 1.0},
+        static={"num_rounds": _REQUIRED, "local_steps": _REQUIRED},
+    ),
+    "dane": AlgoSpec(
+        DANEParams, dane_scan,
+        defaults={"theta": _REQUIRED},
+        static={"num_rounds": _REQUIRED, "surrogate_client": 0},
+        deterministic=True,
+    ),
+    "acc_extragradient": AlgoSpec(
+        AccEGParams, acc_extragradient_scan,
+        defaults={"theta": _REQUIRED, "mu": _REQUIRED},
+        static={"num_rounds": _REQUIRED, "surrogate_client": 0},
+        deterministic=True,
+    ),
+}
+
+
+class BatchResult(NamedTuple):
+    """Stacked `RunResult`s for a sweep batch, plus per-trial labels."""
+
+    dist_sq: jax.Array  # (B, K)
+    comm: jax.Array  # (B, K)
+    x_final: jax.Array  # (B, d)
+    hparams: dict[str, np.ndarray]  # each (B,)
+    seeds: np.ndarray  # (B,)
+
+    @property
+    def num_trials(self) -> int:
+        return self.dist_sq.shape[0]
+
+    def trial(self, i: int) -> RunResult:
+        """Trial i as a plain RunResult (comparable to the sequential driver)."""
+        return RunResult(self.dist_sq[i], self.comm[i], self.x_final[i])
+
+    def labels(self) -> list[dict[str, float]]:
+        return trial_labels(self.hparams, self.seeds)
+
+    def comm_to_accuracy(self, eps: float) -> np.ndarray:
+        """(B,) first cumulative-comm count at which dist_sq <= eps (inf if never)."""
+        return np.asarray(
+            jax.vmap(lambda d, c: RunResult(d, c, c[:0]).comm_to_accuracy(eps))(
+                self.dist_sq, self.comm
+            )
+        )
+
+    def summary(self, q: tuple[float, float] = (25.0, 75.0)) -> dict[str, np.ndarray]:
+        """Median/IQR trajectories over the batch axis (the paper's shaded bands)."""
+        d2 = np.asarray(self.dist_sq)
+        comm = np.asarray(self.comm)
+        lo, hi = q
+        return {
+            "dist_sq_median": np.median(d2, axis=0),
+            "dist_sq_q_lo": np.percentile(d2, lo, axis=0),
+            "dist_sq_q_hi": np.percentile(d2, hi, axis=0),
+            "comm_median": np.median(comm, axis=0),
+        }
+
+
+def _resolve(algo: str) -> AlgoSpec:
+    if algo not in ALGOS:
+        raise KeyError(f"unknown algo {algo!r}; available: {sorted(ALGOS)}")
+    return ALGOS[algo]
+
+
+def _build_trials(
+    spec: AlgoSpec, algo: str, grid: Mapping[str, Any] | None, seeds
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    fields = list(spec.params_cls._fields)
+    grid = dict(grid or {})
+    unknown = set(grid) - set(fields)
+    if unknown:
+        raise ValueError(f"{algo}: unknown hparams {sorted(unknown)}; fields: {fields}")
+    axes = {}
+    for name in fields:  # field order fixes the cartesian-product nesting
+        if name in grid:
+            axes[name] = grid[name]
+        elif spec.defaults[name] is _REQUIRED:
+            raise ValueError(f"{algo}: grid must provide required hparam {name!r}")
+        else:
+            axes[name] = spec.defaults[name]
+    return with_seeds(expand_grid(**axes), seeds)
+
+
+def _static_config(spec: AlgoSpec, algo: str, overrides: Mapping[str, Any]) -> dict:
+    unknown = set(overrides) - set(spec.static)
+    if unknown:
+        raise ValueError(
+            f"{algo}: unknown static config {sorted(unknown)}; accepts: {sorted(spec.static)}"
+        )
+    cfg = {**spec.static, **overrides}
+    missing = [k for k, v in cfg.items() if v is _REQUIRED]
+    if missing:
+        raise ValueError(f"{algo}: missing required static config {missing}")
+    return cfg
+
+
+def _one_trial_fn(scan_fn: Callable, static_items: tuple) -> Callable:
+    static = dict(static_items)
+
+    def one_trial(problem, x0, x_star, key, hp):
+        return scan_fn(problem, x0, x_star, key, hp, **static)
+
+    return one_trial
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_runner(scan_fn: Callable, static_items: tuple) -> Callable:
+    """One jitted vmapped driver per (scan_fn, static-config) pair.
+
+    The returned callable takes `(problem, x0, x_star, keys, hp)` with a
+    leading `(B,)` axis on `keys` and every `hp` leaf; jax's jit cache then
+    keys on shapes/dtypes, so repeated sweeps of the same size compile once.
+    """
+    return jax.jit(
+        jax.vmap(_one_trial_fn(scan_fn, static_items), in_axes=(None, None, None, 0, 0))
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _single_runner(scan_fn: Callable, static_items: tuple) -> Callable:
+    """The per-trial (un-vmapped) jitted driver `run_sequential` loops over."""
+    return jax.jit(_one_trial_fn(scan_fn, static_items))
+
+
+def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star):
+    """Shared entry-point preamble: trial table, static config, validation,
+    and x0/x_star defaults — identical for run_batch and run_sequential so
+    the two can never drift apart."""
+    hparams, seed_arr = _build_trials(spec, algo, grid, seeds)
+    cfg = _static_config(spec, algo, static)
+    if spec.deterministic and np.unique(seed_arr).size > 1:
+        raise ValueError(
+            f"{algo} ignores the PRNG key; a multi-seed axis would run "
+            "bit-identical duplicate trials. Pass seeds=1 (default)."
+        )
+    if cfg.get("prox_solver") == "gd":
+        if "smoothness" not in spec.params_cls._fields:
+            raise ValueError(f"{algo} does not support prox_solver='gd'")
+        if "smoothness" not in (grid or {}):
+            raise ValueError(
+                f"{algo}: prox_solver='gd' needs 'smoothness' in the grid "
+                "(Algorithm 7's stepsize is 1/(L + 1/eta); L=0 silently diverges)"
+            )
+    if x0 is None:
+        x0 = jnp.zeros(problem.dim, dtype=problem.A.dtype if hasattr(problem, "A") else None)
+    if x_star is None:
+        x_star = problem.minimizer()
+    return hparams, seed_arr, cfg, x0, x_star
+
+
+def _keys_for(seeds: np.ndarray) -> jax.Array:
+    """(B,) typed PRNG keys; trial s reproduces jax.random.key(s) exactly."""
+    return jax.vmap(jax.random.key)(jnp.asarray(seeds, dtype=jnp.uint32))
+
+
+def run_batch(
+    algo: str,
+    problem,
+    grid: Mapping[str, Any] | None = None,
+    seeds: int | Sequence[int] = 1,
+    *,
+    x0: jax.Array | None = None,
+    x_star: jax.Array | None = None,
+    fused: bool = False,
+    interpret: bool | None = None,
+    **static,
+) -> BatchResult:
+    """Run `seeds x grid` trials of `algo` on `problem` in ONE jitted vmap.
+
+    `grid` maps hparam names (fields of the algo's params NamedTuple, e.g.
+    eta/p for "svrp") to scalars or sequences; sequences are crossed
+    cartesian-product style and the whole thing is crossed with the seed axis
+    (seed-major).  Remaining kwargs are the algo's static config (num_steps,
+    prox_solver, ...), shared by every trial.
+
+    `fused=True` (svrp/sppm with prox_solver="gd" only) switches to the
+    hand-batched driver whose Algorithm-7 inner loop runs through the batched
+    Pallas prox kernel; `interpret` (fused-only) selects the kernel's
+    interpreter mode and defaults to True, the CPU-safe choice — pass
+    interpret=False on real TPU hardware to compile the kernel.
+
+    Per-trial outputs match the sequential `run_<algo>` driver for the same
+    (seed, hparams) to float tolerance — see tests/test_experiments.py.
+    """
+    spec = _resolve(algo)
+    hparams, seed_arr, cfg, x0, x_star = _prepare(
+        spec, algo, problem, grid, seeds, static, x0, x_star
+    )
+
+    hp = spec.params_cls(**{k: jnp.asarray(v) for k, v in hparams.items()})
+    keys = _keys_for(seed_arr)
+
+    if fused:
+        if not (spec.fusable and cfg.get("prox_solver") == "gd"):
+            raise ValueError(
+                f"{algo}: fused=True requires a fusable algo with prox_solver='gd'"
+            )
+        interpret = True if interpret is None else interpret
+        runner = _fused_runner(algo, cfg["num_steps"], cfg["prox_steps"], interpret)
+        res = runner(problem, x0, x_star, keys, hp)
+    else:
+        if interpret is not None:
+            raise ValueError("interpret only applies to the fused=True Pallas path")
+        runner = _batched_runner(spec.scan_fn, tuple(sorted(cfg.items())))
+        res = runner(problem, x0, x_star, keys, hp)
+
+    return BatchResult(
+        dist_sq=res.dist_sq,
+        comm=res.comm,
+        x_final=res.x_final,
+        hparams=hparams,
+        seeds=seed_arr,
+    )
+
+
+def run_sequential(
+    algo: str,
+    problem,
+    grid: Mapping[str, Any] | None = None,
+    seeds: int | Sequence[int] = 1,
+    *,
+    x0: jax.Array | None = None,
+    x_star: jax.Array | None = None,
+    **static,
+) -> BatchResult:
+    """The per-trial Python loop `run_batch` replaces.
+
+    Same trial set and per-trial numerics, one jitted call PER TRIAL — kept as
+    the equivalence oracle for tests and the baseline for
+    benchmarks/sweep_bench.py.
+    """
+    spec = _resolve(algo)
+    hparams, seed_arr, cfg, x0, x_star = _prepare(
+        spec, algo, problem, grid, seeds, static, x0, x_star
+    )
+
+    single = _single_runner(spec.scan_fn, tuple(sorted(cfg.items())))
+    results = []
+    for i in range(seed_arr.shape[0]):
+        hp = spec.params_cls(**{k: jnp.asarray(v[i]) for k, v in hparams.items()})
+        results.append(single(problem, x0, x_star, jax.random.key(int(seed_arr[i])), hp))
+    return BatchResult(
+        dist_sq=jnp.stack([r.dist_sq for r in results]),
+        comm=jnp.stack([r.comm for r in results]),
+        x_final=jnp.stack([r.x_final for r in results]),
+        hparams=hparams,
+        seeds=seed_arr,
+    )
+
+
+# ---------------------------------------------------------------- fused "gd" path
+#
+# Hand-batched scans for the approximate-prox ("gd") solver: state is (B, d),
+# sampling is vmapped per-trial (bit-identical key usage to the sequential
+# drivers), and the Algorithm-7 inner loop goes through the batched Pallas
+# kernel so each GD step is one fused launch for the whole sweep.
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_runner(algo: str, num_steps: int, prox_steps: int, interpret: bool) -> Callable:
+    step_fused = {"svrp": _svrp_step_fused, "sppm": _sppm_step_fused}[algo]
+
+    def run(problem, x0, x_star, keys, hp):
+        B = keys.shape[0]
+        d = x0.shape[-1]
+        M = problem.num_clients
+        eta = jnp.broadcast_to(jnp.asarray(hp.eta, x0.dtype), (B,))
+        L = jnp.broadcast_to(jnp.asarray(hp.smoothness, x0.dtype), (B,))
+        xB = jnp.broadcast_to(x0, (B, d))
+
+        # Per-trial per-step keys, identical to jax.random.split in the
+        # sequential scan: (B, num_steps) -> scan over axis 0 = step index.
+        step_keys = jnp.swapaxes(
+            jax.vmap(lambda k: jax.random.split(k, num_steps))(keys), 0, 1
+        )
+
+        carry, extras = _fused_init(algo, problem, hp, xB, x0, B, M)
+
+        def step(state, keys_k):
+            return step_fused(
+                problem, state, keys_k, eta, L, x_star, prox_steps, interpret, extras
+            )
+
+        final, (d2s, comms) = jax.lax.scan(step, carry, step_keys)
+        return RunResult(
+            dist_sq=jnp.swapaxes(d2s, 0, 1),
+            comm=jnp.swapaxes(comms, 0, 1),
+            x_final=final[0],
+        )
+
+    return jax.jit(run)
+
+
+def _fused_init(algo, problem, hp, xB, x0, B, M):
+    if algo == "svrp":
+        gbar = jnp.broadcast_to(problem.full_grad(x0), xB.shape)
+        comm = jnp.full((B,), 3 * M)
+        p = jnp.broadcast_to(jnp.asarray(hp.p, x0.dtype), (B,))
+        return (xB, xB, gbar, comm), (p,)
+    comm = jnp.zeros((B,), dtype=jnp.asarray(0).dtype)
+    return (xB, comm), ()
+
+
+def _sppm_step_fused(problem, state, keys_k, eta, L, x_star, prox_steps, interpret, extras):
+    x, comm = state
+    M = problem.num_clients
+    m = jax.vmap(lambda k: jax.random.randint(k, (), 0, M))(keys_k)
+    grad_b = jax.vmap(problem.grad)
+    x_next = prox_gd_batched(
+        lambda y: grad_b(m, y), x, eta, L, prox_steps, use_kernel=True, interpret=interpret
+    )
+    comm = comm + 2
+    d2 = jnp.sum((x_next - x_star[None]) ** 2, axis=-1)
+    return (x_next, comm), (d2, comm)
+
+
+def _svrp_step_fused(problem, state, keys_k, eta, L, x_star, prox_steps, interpret, extras):
+    x, w, gbar, comm = state
+    (p,) = extras
+    M = problem.num_clients
+    split = jax.vmap(jax.random.split)(keys_k)  # (B, 2) keys
+    key_m, key_c = split[:, 0], split[:, 1]
+    m = jax.vmap(lambda k: jax.random.randint(k, (), 0, M))(key_m)
+    grad_b = jax.vmap(problem.grad)
+
+    g_k = gbar - grad_b(m, w)
+    z = x - eta[:, None] * g_k
+    x_next = prox_gd_batched(
+        lambda y: grad_b(m, y), z, eta, L, prox_steps, use_kernel=True, interpret=interpret
+    )
+
+    c = jax.vmap(jax.random.bernoulli)(key_c, p)
+    w_next = jnp.where(c[:, None], x_next, w)
+    gbar_next = jnp.where(c[:, None], jax.vmap(problem.full_grad)(w_next), gbar)
+    comm = comm + 2 + 3 * M * c.astype(jnp.int32)
+    d2 = jnp.sum((x_next - x_star[None]) ** 2, axis=-1)
+    return (x_next, w_next, gbar_next, comm), (d2, comm)

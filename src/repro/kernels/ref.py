@@ -128,3 +128,17 @@ def prox_update(y, g, z, local_lr, inv_eta):
     Elementwise; the Pallas version fuses the three reads + one write.
     """
     return y - local_lr * (g + (y - z) * inv_eta)
+
+
+def prox_update_batched(y, g, z, local_lr, inv_eta):
+    """Per-trial prox-GD step over a sweep batch.  Oracle.
+
+    y, g, z: (B, *trail); local_lr, inv_eta: (B,) (or scalars).  Trial b is
+    updated with its own (local_lr[b], inv_eta[b]) — the reference for the
+    batched Pallas kernel whose grid spans batch x row-blocks.
+    """
+    B = y.shape[0]
+    extra = (1,) * (y.ndim - 1)
+    lr = jnp.broadcast_to(jnp.asarray(local_lr, y.dtype), (B,)).reshape(B, *extra)
+    ie = jnp.broadcast_to(jnp.asarray(inv_eta, y.dtype), (B,)).reshape(B, *extra)
+    return y - lr * (g + (y - z) * ie)

@@ -19,13 +19,11 @@ writes a JSON record under experiments/dryrun/.
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.configs.shapes import cache_specs, input_specs, resolve_config, shape_supported

@@ -7,7 +7,17 @@ default).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 — older jaxlibs default every axis to Auto anyway
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,16 +27,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     only traffic that must cross it every round."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int | None = None):
     """Small host-device mesh for CPU tests (requires
     XLA_FLAGS=--xla_force_host_platform_device_count >= data*model*(pod or 1))."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def data_axis_names(mesh) -> tuple[str, ...]:

@@ -20,8 +20,6 @@
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -35,9 +33,30 @@ from repro.launch import sharding as shd
 from repro.launch.mesh import data_axis_names, num_cohorts
 from repro.models import model as M
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm
-from repro.utils.tree import tree_sub, tree_where
+from repro.utils.tree import tree_where
 
 PyTree = Any
+
+
+def _shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
+    """jax.shard_map across jax versions.
+
+    jax >= 0.6 exposes `jax.shard_map(..., axis_names=manual, check_vma=...)`;
+    older releases spell it `jax.experimental.shard_map.shard_map(...,
+    auto=non_manual, check_rep=...)`.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(manual_axes), check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - set(manual_axes)
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False, auto=auto,
+    )
 
 
 class SVRPServerState(NamedTuple):
@@ -119,7 +138,10 @@ class MeshStep:
         self.mesh = mesh
 
     def lower(self, *args, **kwargs):
-        with jax.set_mesh(self.mesh):
+        # jax >= 0.6 spells the active-mesh context jax.set_mesh; on older
+        # releases the Mesh object itself is the context manager.
+        ctx = jax.set_mesh(self.mesh) if hasattr(jax, "set_mesh") else self.mesh
+        with ctx:
             return self._fn.lower(*args, **kwargs)
 
     def __call__(self, *args, **kwargs):
@@ -221,13 +243,12 @@ def make_svrp_train_step(cfg: ModelConfig, mesh, svrp: DeepSVRPConfig):
 
     def make_step(batch_like):
         bspecs = batch_specs(batch_like)
-        smapped = jax.shard_map(
+        smapped = _shard_map_compat(
             round_fn,
             mesh=mesh,
             in_specs=(full_manual, full_manual, full_manual, P(), P(), bspecs),
             out_specs=(full_manual, full_manual, {"loss": P()}),
-            axis_names=set(daxes),
-            check_vma=False,
+            manual_axes=set(daxes),
         )
 
         def step(state: SVRPServerState, batch):

@@ -19,8 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config

@@ -14,7 +14,6 @@ Batch dicts by family:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

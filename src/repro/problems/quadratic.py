@@ -16,7 +16,6 @@ closed form, which is what makes them the canonical validation substrate:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +71,32 @@ class QuadraticProblem:
         b_m = jnp.take(self.b, m, axis=0)
         H = jnp.eye(self.dim, dtype=z.dtype) + eta * A_m
         return jnp.linalg.solve(H, z + eta * b_m)
+
+    def prox_factors(self) -> tuple[jax.Array, jax.Array]:
+        """Per-client eigendecompositions A_m = Q_m diag(lam_m) Q_m^T.
+
+        One-time O(M d^3) factorization that turns every subsequent prox into
+        two matvecs + a diagonal solve (`prox_spectral`) — the scan-resident
+        prox path of the batched experiment engine, which otherwise pays a
+        serial LAPACK LU per trial per step on CPU.
+        """
+        lam, Q = jnp.linalg.eigh(self.A)
+        return lam, Q
+
+    def prox_spectral(
+        self, m: jax.Array, z: jax.Array, eta: jax.Array, factors
+    ) -> jax.Array:
+        """prox via the cached spectral factors: Q ((Q^T (z + eta b)) / (1 + eta lam)).
+
+        Same operator as `prox` up to factorization round-off (~eps * cond,
+        |diff| ~ 1e-12 in f64 on the benchmark instances).
+        """
+        lam, Q = factors
+        Q_m = jnp.take(Q, m, axis=0)
+        lam_m = jnp.take(lam, m, axis=0)
+        b_m = jnp.take(self.b, m, axis=0)
+        rhs = z + eta * b_m
+        return Q_m @ ((Q_m.T @ rhs) / (1.0 + eta * lam_m))
 
     def shifted(self, gamma: float, y: jax.Array) -> "QuadraticProblem":
         """Catalyst subproblem  h_t,m(x) = f_m(x) + gamma/2 ||x - y||^2."""

@@ -1,1 +1,3 @@
 from repro.utils import tree
+
+__all__ = ["tree"]

@@ -20,9 +20,18 @@ from jax.sharding import PartitionSpec as P
 def _active_axes() -> tuple:
     try:
         am = jax.sharding.get_abstract_mesh()
+        axes = tuple(getattr(am, "axis_names", ()) or ())
+        if axes:  # empty → fall through: the mesh may be set via `with mesh:`
+            return axes
+    except Exception:
+        pass
+    try:  # jax < 0.5: the `with mesh:` resource env
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        return tuple(m.axis_names) if m.devices.size else ()
     except Exception:
         return ()
-    return tuple(getattr(am, "axis_names", ()) or ())
 
 
 def constrain(x, *spec):

@@ -1,0 +1,87 @@
+"""Deterministic stand-in for `hypothesis` so the suite runs in clean envs.
+
+The container image does not ship `hypothesis` (it is an optional `[test]`
+extra — see pyproject.toml).  When the real package is importable, conftest.py
+never loads this module.  When it is not, conftest registers this stub under
+``sys.modules["hypothesis"]`` *before* collection, so the property tests still
+execute: each ``@given`` test is run ``max_examples`` times (capped) with
+values drawn from a seeded PRNG, which preserves the tests' bug-finding
+coverage minus shrinking/replay.
+
+Only the subset of the hypothesis API this repo uses is provided:
+``given``, ``settings``, ``strategies.integers/floats/sampled_from/booleans``,
+and an importable (empty) ``hypothesis.extra.numpy``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random as _random
+
+_DEFAULT_EXAMPLES = 10
+_EXAMPLES_CAP = 25  # keep clean-env CI runtime bounded
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: _random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def settings(**kwargs):
+    """No-op decorator that records max_examples for `given` to honor."""
+    max_examples = kwargs.get("max_examples", _DEFAULT_EXAMPLES)
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies_by_name):
+    """Run the test body over deterministic pseudo-random draws."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", None) or getattr(
+                fn, "_stub_max_examples", _DEFAULT_EXAMPLES
+            )
+            rng = _random.Random(0)
+            for _ in range(min(n, _EXAMPLES_CAP)):
+                drawn = {k: s.draw(rng) for k, s in strategies_by_name.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest resolves fixtures from the *visible* signature: hide the
+        # strategy-filled parameters (and the __wrapped__ set by wraps, which
+        # pytest would otherwise follow back to the original signature).
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies_by_name
+            ]
+        )
+        return wrapper
+
+    return deco

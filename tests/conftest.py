@@ -1,6 +1,31 @@
+import importlib.util
+import os
+import sys
+import types
+
 import jax
 
 # The paper-faithful layer validates convergence to ~1e-12 of the optimum;
 # float64 is required for that. Model/kernel code pins its dtypes explicitly,
 # so enabling x64 globally is safe for the whole suite.
 jax.config.update("jax_enable_x64", True)
+
+# `hypothesis` is an optional [test] extra; in a clean env the property tests
+# fall back to the deterministic stub (see tests/_hypothesis_stub.py). This
+# must run at conftest import time, before any test module is collected.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _stub_path = os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _stub_path)
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    _stub.strategies = _stub  # `from hypothesis import strategies as st`
+    _extra = types.ModuleType("hypothesis.extra")
+    _extra_np = types.ModuleType("hypothesis.extra.numpy")
+    _extra.numpy = _extra_np
+    _stub.extra = _extra
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub
+    sys.modules["hypothesis.extra"] = _extra
+    sys.modules["hypothesis.extra.numpy"] = _extra_np

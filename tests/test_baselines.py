@@ -1,7 +1,6 @@
 """Every baseline from Fig. 1 / Table 1 converges with its theory parameters."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import (

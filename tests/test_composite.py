@@ -1,7 +1,6 @@
 """Theorem 5: composite SVRP (Algorithm 4) on l1 / box / l2-ball constraints."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import (

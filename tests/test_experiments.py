@@ -1,0 +1,285 @@
+"""Batched experiment engine: run_batch == sequential drivers, one compile."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    run_catalyzed_svrp,
+    run_catalyzed_svrp_host,
+    run_sppm,
+    run_svrg,
+    run_svrp,
+    run_svrp_minibatch,
+    theorem2_stepsize,
+)
+from repro.experiments import expand_grid, grid_size, run_batch, run_sequential
+from repro.experiments import runner as runner_mod
+from repro.problems import make_synthetic_quadratic
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_synthetic_quadratic(num_clients=24, dim=10, mu=1.0, L=300.0, delta=5.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def theory(prob):
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    return {
+        "eta": theorem2_stepsize(mu, delta),
+        "mu": mu,
+        "delta": delta,
+        "L": float(prob.smoothness_max()),
+        "x_star": prob.minimizer(),
+        "x0": jnp.zeros(prob.dim),
+    }
+
+
+# ------------------------------------------------------------------- grid layer
+def test_expand_grid_cartesian_product():
+    g = expand_grid(eta=[1e-3, 1e-2], p=[0.1, 0.2, 0.3], s=7.0)
+    assert g["eta"].shape == g["p"].shape == g["s"].shape == (6,)
+    assert grid_size({"eta": [1e-3, 1e-2], "p": [0.1, 0.2, 0.3], "s": 7.0}) == 6
+    # first axis slowest, scalars broadcast
+    np.testing.assert_allclose(g["eta"], [1e-3] * 3 + [1e-2] * 3)
+    np.testing.assert_allclose(g["p"], [0.1, 0.2, 0.3] * 2)
+    np.testing.assert_allclose(g["s"], 7.0)
+
+
+def test_run_batch_validates_inputs(prob):
+    with pytest.raises(KeyError):
+        run_batch("nope", prob, grid={}, num_steps=5)
+    with pytest.raises(ValueError, match="required hparam"):
+        run_batch("svrp", prob, grid={"eta": 0.1}, num_steps=5)  # missing p
+    with pytest.raises(ValueError, match="unknown hparams"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.1, "zeta": 1.0}, num_steps=5)
+    with pytest.raises(ValueError, match="missing required static"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.1})  # missing num_steps
+    with pytest.raises(ValueError, match="fused=True"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.1}, num_steps=5, fused=True)
+    with pytest.raises(ValueError, match="smoothness"):
+        # gd without L would run Algorithm 7 with beta=eta and silently diverge
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.1}, num_steps=5, prox_solver="gd")
+    with pytest.raises(ValueError, match="deterministic|ignores the PRNG"):
+        run_batch("dane", prob, grid={"theta": 5.0}, seeds=4, num_rounds=5)
+    with pytest.raises(ValueError, match="seeds"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.1}, seeds=[2**32 + 1], num_steps=5)
+
+
+# --------------------------------------------------- acceptance: 32-trial sweeps
+def test_run_batch_32_trials_matches_sequential_svrp(prob, theory):
+    """The headline guarantee: a 32-trial (4 etas x 8 seeds) sweep in ONE jit
+    reproduces every per-seed `run_svrp` trajectory to <= 1e-5."""
+    eta = theory["eta"]
+    grid = {"eta": [eta, eta / 2, 2 * eta, eta / 4], "p": 1 / 24}
+    res = run_batch("svrp", prob, grid=grid, seeds=8, num_steps=300)
+    assert res.num_trials == 32 and res.dist_sq.shape == (32, 300)
+
+    for i, lab in enumerate(res.labels()):
+        r = run_svrp(
+            prob, theory["x0"], theory["x_star"], eta=lab["eta"], p=lab["p"],
+            num_steps=300, key=jax.random.key(lab["seed"]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+        )
+        np.testing.assert_array_equal(np.asarray(res.comm[i]), np.asarray(r.comm))
+        np.testing.assert_allclose(
+            np.asarray(res.x_final[i]), np.asarray(r.x_final), rtol=1e-5, atol=1e-12
+        )
+
+
+def test_run_batch_compiles_once(prob, theory):
+    """One jitted driver, one compilation entry for the whole 32-trial sweep."""
+    runner_mod._batched_runner.cache_clear()
+    grid = {"eta": [theory["eta"], theory["eta"] / 2], "p": [1 / 24, 2 / 24]}
+    res1 = run_batch("svrp", prob, grid=grid, seeds=8, num_steps=50)
+    res2 = run_batch("svrp", prob, grid=grid, seeds=8, num_steps=50)
+    assert res1.num_trials == res2.num_trials == 32
+    assert runner_mod._batched_runner.cache_info().currsize == 1
+    from repro.core.svrp import svrp_scan
+
+    jitted = runner_mod._batched_runner(
+        svrp_scan,
+        tuple(sorted({"num_steps": 50, "prox_solver": "exact", "prox_steps": 50}.items())),
+    )
+    cache_size = getattr(jitted, "_cache_size", lambda: None)()
+    if cache_size is not None:  # jax exposes the tracing-cache size
+        assert cache_size == 1, cache_size
+
+
+def test_run_sequential_is_trialwise_identical_to_run_batch(prob, theory):
+    """The benchmark baseline (`run_sequential`, one jitted call per trial)
+    produces the same trial set and numerics as the batched engine."""
+    eta = theory["eta"]
+    grid = {"eta": [eta, eta / 3], "p": 1 / 24}
+    seq = run_sequential("svrp", prob, grid=grid, seeds=2, num_steps=80)
+    bat = run_batch("svrp", prob, grid=grid, seeds=2, num_steps=80)
+    assert seq.labels() == bat.labels()
+    np.testing.assert_allclose(
+        np.asarray(seq.dist_sq), np.asarray(bat.dist_sq), rtol=1e-6, atol=1e-24
+    )
+    np.testing.assert_array_equal(np.asarray(seq.comm), np.asarray(bat.comm))
+
+
+def test_run_batch_matches_sequential_sppm(prob, theory):
+    res = run_batch("sppm", prob, grid={"eta": [0.05, 0.2]}, seeds=4, num_steps=200)
+    assert res.num_trials == 8
+    for i, lab in enumerate(res.labels()):
+        r = run_sppm(
+            prob, theory["x0"], theory["x_star"], eta=lab["eta"], num_steps=200,
+            key=jax.random.key(lab["seed"]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+        )
+
+
+def test_run_batch_matches_sequential_minibatch(prob, theory):
+    res = run_batch(
+        "svrp_minibatch", prob, grid={"eta": theory["eta"] * 4, "p": 4 / 24},
+        seeds=3, num_steps=150, batch_clients=4,
+    )
+    for i, lab in enumerate(res.labels()):
+        r = run_svrp_minibatch(
+            prob, theory["x0"], theory["x_star"], eta=lab["eta"], p=lab["p"],
+            batch_clients=4, num_steps=150, key=jax.random.key(lab["seed"]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+        )
+
+
+def test_run_batch_matches_sequential_svrg(prob, theory):
+    res = run_batch(
+        "svrg", prob, grid={"stepsize": 1 / (6 * theory["L"]), "p": 1 / 24},
+        seeds=3, num_steps=200,
+    )
+    for i, lab in enumerate(res.labels()):
+        r = run_svrg(
+            prob, theory["x0"], theory["x_star"], stepsize=lab["stepsize"], p=lab["p"],
+            num_steps=200, key=jax.random.key(lab["seed"]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+        )
+
+
+def test_catalyzed_svrp_scan_matches_host_loop(prob, theory):
+    """The fully-scanned Catalyst (engine path) == the host-side outer loop."""
+    mu, delta = theory["mu"], theory["delta"]
+    kw = dict(mu=mu, delta=delta, num_outer=6, key=jax.random.key(0))
+    r_scan = run_catalyzed_svrp(prob, theory["x0"], theory["x_star"], **kw)
+    r_host = run_catalyzed_svrp_host(prob, theory["x0"], theory["x_star"], **kw)
+    np.testing.assert_allclose(
+        np.asarray(r_scan.dist_sq), np.asarray(r_host.dist_sq), rtol=1e-7, atol=1e-24
+    )
+    np.testing.assert_array_equal(np.asarray(r_scan.comm), np.asarray(r_host.comm))
+
+
+def test_catalyzed_spectral_hoisted_factors_match_exact(prob, theory):
+    """Catalyst + spectral prox shares the base eigenvectors across outer
+    stages (factors hoisted once, shifted by gamma per stage) — must track
+    the exact-prox run to factorization round-off."""
+    from repro.core import catalyst_inner_iterations, theorem3_gamma
+
+    mu, delta, M = theory["mu"], theory["delta"], 24
+    gamma = max(theorem3_gamma(mu, delta, M), 0.5)  # force a nonzero shift
+    inner = min(catalyst_inner_iterations(mu, delta, M), 150)
+    eta_in = theorem2_stepsize(mu + gamma, delta)
+    grid = {"mu": mu, "gamma": gamma, "eta": eta_in, "p": 1 / M}
+    kw = dict(seeds=2, num_outer=4, inner_steps=inner)
+    r_s = run_batch("catalyzed_svrp", prob, grid=grid, prox_solver="spectral", **kw)
+    r_e = run_batch("catalyzed_svrp", prob, grid=grid, **kw)
+    np.testing.assert_allclose(
+        np.asarray(r_s.dist_sq), np.asarray(r_e.dist_sq), rtol=1e-4, atol=1e-20
+    )
+
+
+def test_run_batch_catalyzed(prob, theory):
+    """Engine can sweep the full Catalyzed-SVRP (nested scan) too."""
+    from repro.core import catalyst_inner_iterations, theorem3_gamma
+
+    mu, delta, M = theory["mu"], theory["delta"], 24
+    gamma = theorem3_gamma(mu, delta, M)
+    inner = min(catalyst_inner_iterations(mu, delta, M), 200)
+    eta_in = theorem2_stepsize(mu + gamma, delta)
+    res = run_batch(
+        "catalyzed_svrp", prob,
+        grid={"mu": mu, "gamma": gamma, "eta": eta_in, "p": 1 / M},
+        seeds=2, num_outer=4, inner_steps=inner,
+    )
+    assert res.dist_sq.shape == (2, 4 * inner)
+    assert bool(jnp.all(jnp.isfinite(res.dist_sq)))
+    # converging, and strictly decreasing across outer stages in aggregate
+    assert float(jnp.median(res.dist_sq[:, -1])) < 1e-6 * float(res.dist_sq[0, 0])
+
+
+# --------------------------------------------------------- spectral + fused paths
+def test_spectral_prox_matches_exact(prob, theory):
+    """prox_solver='spectral' (hoisted eigh; the engine's CPU fast path) tracks
+    the LU-exact trajectories to factorization round-off."""
+    eta = theory["eta"]
+    res_s = run_batch(
+        "svrp", prob, grid={"eta": eta, "p": 1 / 24}, seeds=4, num_steps=300,
+        prox_solver="spectral",
+    )
+    res_e = run_batch("svrp", prob, grid={"eta": eta, "p": 1 / 24}, seeds=4, num_steps=300)
+    np.testing.assert_allclose(
+        np.asarray(res_s.dist_sq), np.asarray(res_e.dist_sq), rtol=1e-4, atol=1e-20
+    )
+    np.testing.assert_array_equal(np.asarray(res_s.comm), np.asarray(res_e.comm))
+
+
+def test_fused_gd_path_matches_sequential(prob, theory):
+    """fused=True routes Algorithm 7 through the batched Pallas kernel; the
+    per-trial results must still match the sequential 'gd' driver."""
+    eta, L = theory["eta"], theory["L"]
+    grid = {"eta": [eta, eta / 2], "p": 1 / 24, "smoothness": L}
+    kw = dict(num_steps=50, prox_solver="gd", prox_steps=20)
+    res = run_batch("svrp", prob, grid=grid, seeds=2, fused=True, **kw)
+    assert res.num_trials == 4
+    for i, lab in enumerate(res.labels()):
+        r = run_svrp(
+            prob, theory["x0"], theory["x_star"], eta=lab["eta"], p=lab["p"],
+            smoothness=lab["smoothness"], key=jax.random.key(lab["seed"]), **kw,
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-20
+        )
+        np.testing.assert_array_equal(np.asarray(res.comm[i]), np.asarray(r.comm))
+
+
+def test_fused_sppm_matches_sequential(prob, theory):
+    res = run_batch(
+        "sppm", prob, grid={"eta": 0.05, "smoothness": theory["L"]}, seeds=3,
+        num_steps=60, prox_solver="gd", prox_steps=25, fused=True,
+    )
+    for i, lab in enumerate(res.labels()):
+        r = run_sppm(
+            prob, theory["x0"], theory["x_star"], eta=lab["eta"], num_steps=60,
+            key=jax.random.key(lab["seed"]), prox_solver="gd", prox_steps=25,
+            smoothness=lab["smoothness"],
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-20
+        )
+
+
+# ------------------------------------------------------------------- result API
+def test_batch_result_api(prob, theory):
+    eta = theory["eta"]
+    res = run_batch("svrp", prob, grid={"eta": [eta, eta / 2], "p": 1 / 24},
+                    seeds=[3, 7], num_steps=100)
+    assert res.num_trials == 4
+    labels = res.labels()
+    assert [lab["seed"] for lab in labels] == [3, 3, 7, 7]  # seed-major order
+    s = res.summary()
+    assert s["dist_sq_median"].shape == (100,)
+    assert np.all(s["dist_sq_q_lo"] <= s["dist_sq_q_hi"])
+    c2a = res.comm_to_accuracy(1e-8)
+    assert c2a.shape == (4,) and np.all(c2a > 0)
+    t = res.trial(2)
+    np.testing.assert_array_equal(np.asarray(t.dist_sq), np.asarray(res.dist_sq[2]))

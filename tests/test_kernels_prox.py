@@ -1,13 +1,19 @@
-"""prox_update fused kernel (the paper's Algorithm 7 inner step)."""
+"""prox_update fused kernel (the paper's Algorithm 7 inner step).
+
+`hypothesis` is optional: in clean envs conftest.py installs the deterministic
+stub from tests/_hypothesis_stub.py before collection, so these property tests
+always run (install the real package via the `[test]` extra for shrinking).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from hypothesis.extra import numpy as hnp  # noqa: F401  (exercises the stub's submodule path)
 
 from repro.kernels import ref
 from repro.kernels.prox_update import prox_update as prox_pallas
+from repro.kernels.prox_update import prox_update_batched as prox_pallas_batched
 
 
 @pytest.mark.parametrize("shape", [(7,), (3, 37, 11), (128, 128), (100_001,)])
@@ -40,6 +46,100 @@ def test_prox_update_property(n, lr, inv_eta, seed):
     g_fix = -(y - z) * inv_eta
     out = prox_pallas(y, g_fix, z, lr, inv_eta)
     np.testing.assert_allclose(np.asarray(out), np.asarray(y), atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "shape", [(4, 7), (3, 37, 11), (2, 128, 128), (5, 300), (2, 100_001), (6,)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prox_update_batched_matches_ref(shape, dtype):
+    """The sweep-batch kernel (grid over batch x row-blocks, per-trial scalars
+    in the (B, 2) operand) must match the oracle on odd shapes/dtypes."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    y = jax.random.normal(ks[0], shape, dtype)
+    g = jax.random.normal(ks[1], shape, dtype)
+    z = jax.random.normal(ks[2], shape, dtype)
+    B = shape[0]
+    lr = jnp.linspace(0.01, 0.9, B)  # distinct per-trial scalars
+    inv_eta = jnp.linspace(0.5, 4.0, B)
+    o_ref = ref.prox_update_batched(y, g, z, lr, inv_eta)
+    o_pal = prox_pallas_batched(y, g, z, lr, inv_eta)
+    tol = dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(o_pal, np.float32), np.asarray(o_ref, np.float32), **tol
+    )
+    assert o_pal.shape == shape and o_pal.dtype == dtype
+
+
+def test_prox_update_batched_uses_per_trial_scalars():
+    """Trial b must see ITS scalars: each batched row equals the single-trial
+    kernel run with that row's (lr, inv_eta)."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    B, n = 5, 77
+    y = jax.random.normal(ks[0], (B, n))
+    g = jax.random.normal(ks[1], (B, n))
+    z = jax.random.normal(ks[2], (B, n))
+    lr = jnp.asarray([0.1, 0.2, 0.3, 0.4, 0.5])
+    inv_eta = jnp.asarray([2.0, 1.0, 0.5, 4.0, 3.0])
+    out = prox_pallas_batched(y, g, z, lr, inv_eta)
+    for b in range(B):
+        single = prox_pallas(y[b], g[b], z[b], float(lr[b]), float(inv_eta[b]))
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(single), rtol=1e-12)
+
+
+def test_prox_update_batched_broadcasts_scalars():
+    y = jnp.ones((3, 40))
+    g = jnp.ones((3, 40))
+    z = jnp.zeros((3, 40))
+    out = prox_pallas_batched(y, g, z, 0.1, 2.0)  # python scalars broadcast
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.prox_update(y, g, z, 0.1, 2.0)), rtol=1e-12
+    )
+
+
+def test_prox_update_batched_f64_and_traced_scalars():
+    """The engine runs in f64 with traced per-trial scalars under jit."""
+    B, n = 4, 33
+    ks = jax.random.split(jax.random.key(3), 3)
+    y = jax.random.normal(ks[0], (B, n), jnp.float64)
+    g = jax.random.normal(ks[1], (B, n), jnp.float64)
+    z = jax.random.normal(ks[2], (B, n), jnp.float64)
+
+    @jax.jit
+    def f(lr, inv_eta):
+        return prox_pallas_batched(y, g, z, lr, inv_eta)
+
+    lr = jnp.linspace(0.05, 0.4, B)
+    inv_eta = jnp.linspace(1.0, 2.0, B)
+    np.testing.assert_allclose(
+        np.asarray(f(lr, inv_eta)),
+        np.asarray(ref.prox_update_batched(y, g, z, lr, inv_eta)),
+        rtol=1e-12,
+    )
+
+
+def test_prox_gd_batched_kernel_equals_jnp_path():
+    """core.prox_gd_batched(use_kernel=True) == the plain jnp expression, and
+    both == per-trial prox_gd."""
+    from repro.core.prox import prox_gd, prox_gd_batched
+    from repro.problems import make_synthetic_quadratic
+
+    prob = make_synthetic_quadratic(num_clients=6, dim=12, mu=1.0, L=50.0, delta=3.0, seed=0)
+    B = 4
+    ms = jnp.asarray([0, 2, 4, 5])
+    z = jax.random.normal(jax.random.key(0), (B, 12))
+    eta = jnp.asarray([0.5, 0.2, 1.0, 0.1])
+    L = jnp.full((B,), float(prob.smoothness_max()))
+    grad_b = jax.vmap(prob.grad)
+
+    out_k = prox_gd_batched(lambda y: grad_b(ms, y), z, eta, L, 30, use_kernel=True)
+    out_j = prox_gd_batched(lambda y: grad_b(ms, y), z, eta, L, 30, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_j), rtol=1e-10, atol=1e-12)
+    for b in range(B):
+        single = prox_gd(
+            lambda y: prob.grad(ms[b], y), z[b], float(eta[b]), float(L[b]), 30
+        )
+        np.testing.assert_allclose(np.asarray(out_k[b]), np.asarray(single), rtol=1e-8, atol=1e-10)
 
 
 def test_prox_update_under_jit_and_traced_scalars():

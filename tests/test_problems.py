@@ -1,5 +1,4 @@
 """Problem substrate: exact constants and oracles of the quadratic family."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

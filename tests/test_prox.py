@@ -1,5 +1,4 @@
 """Proximal machinery: contraction (Fact 2), approximate solvers (Alg 7)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,8 +1,6 @@
 """The HLO program-cost analyzer behind §Roofline (loop-aware collectives)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch import roofline as rl
 
@@ -43,12 +41,16 @@ def test_collective_bytes_loop_weighted():
 
     code = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 import sys
 sys.path.insert(0, "src")
 from repro.launch import roofline as rl
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+except ImportError:
+    mesh = jax.make_mesh((4,), ("data",))
 
 def f(x):
     def body(x, _):
@@ -56,8 +58,12 @@ def f(x):
     x, _ = jax.lax.scan(body, x, None, length=5)
     return x
 
-sm = jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(), axis_names={"data"},
-                   check_vma=False)
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    sm = jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                       axis_names={"data"}, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map
+    sm = shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(), check_rep=False)
 c = jax.jit(sm).lower(jnp.zeros((8, 128))).compile()
 txt = c.as_text()
 by, counts = rl.collective_stats(txt)

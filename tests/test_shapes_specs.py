@@ -1,6 +1,5 @@
 """Input-shape specs and long-context config resolution (deliverables e/f)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, REGISTRY, input_specs, shape_supported

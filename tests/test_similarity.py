@@ -1,6 +1,5 @@
 """Constant estimators (Section 9 measurement tooling)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import empirical_delta, empirical_smoothness, grad_noise_at

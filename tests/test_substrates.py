@@ -1,5 +1,4 @@
 """Data pipeline, optimizers, checkpointing."""
-import os
 
 import jax
 import jax.numpy as jnp
