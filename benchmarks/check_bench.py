@@ -1,0 +1,84 @@
+"""Benchmark-regression gate: measured speedups vs the checked-in baseline.
+
+    python -m benchmarks.check_bench BENCH_sweep.json benchmarks/BENCH_sweep_baseline.json
+
+Absolute wall-clock differs across runner generations, so the gate compares
+the RATIOS (batch-vs-loop speedup factors), which are machine-portable: they
+measure what the engine saves, not how fast the host is.  A measured ratio
+below ``--floor`` (default 0.7) times its baseline value fails the job —
+i.e. the PR destroyed >= 30% of the recorded batching win.
+
+Exit code 0 = all gated ratios hold; 1 = regression; 2 = malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Ratios the gate enforces.  Sharded ratios are NOT gated: the bench job runs
+# single-device, and the sharded number is informational (recorded when the
+# simulated-multi-device job uploads its own JSON).
+GATED = (
+    "batch_spectral_vs_loop_exact",
+    "batch_spectral_vs_loop_spectral",
+    "batch_exact_vs_loop_exact",
+)
+
+
+def check(measured: dict, baseline: dict, floor: float) -> list[str]:
+    failures = []
+    gated = 0
+    for key in GATED:
+        base = baseline.get("speedups", {}).get(key)
+        got = measured.get("speedups", {}).get(key)
+        if base is None:
+            continue  # baseline predates this ratio — nothing to hold
+        gated += 1
+        if got is None:
+            failures.append(f"{key}: missing from measured results (baseline {base:.2f}x)")
+            continue
+        if got < floor * base:
+            failures.append(
+                f"{key}: measured {got:.2f}x < {floor:.2f} * baseline {base:.2f}x "
+                f"(= {floor * base:.2f}x floor)"
+            )
+        else:
+            print(f"ok: {key}: {got:.2f}x (baseline {base:.2f}x, floor {floor * base:.2f}x)")
+    if gated == 0:
+        # A baseline with no recognizable ratios must not pass vacuously — a
+        # schema rename or truncated file would otherwise green the gate forever.
+        failures.append(
+            "baseline contains none of the gated ratios "
+            f"({', '.join(GATED)}) — gate checked nothing"
+        )
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("measured", help="JSON written by benchmarks.sweep_bench --json")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--floor", type=float, default=0.7,
+                    help="minimum allowed fraction of the baseline ratio")
+    args = ap.parse_args()
+
+    try:
+        with open(args.measured) as f:
+            measured = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot read inputs: {e}", file=sys.stderr)
+        sys.exit(2)
+
+    failures = check(measured, baseline, args.floor)
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print("bench gate: all speedup ratios within floor of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,22 @@ separately):
 * batch/spectral  — run_batch + spectral prox: the engine's fast path
 
 Headline = loop/exact vs batch/spectral (what the benchmarks used to do vs
-what they do now).  Acceptance floor: >= 5x at B >= 32 on CPU.
+what they do now).  Acceptance floor: >= 5x at B >= 32 on CPU.  When more
+than one device is visible (XLA_FLAGS=--xla_force_host_platform_device_count
+or real accelerators) a `shard/spectral` timing of `run_batch(shard="data")`
+is measured too.
+
+CLI (the CI bench job's entry point):
+
+    python -m benchmarks.sweep_bench --json BENCH_sweep.json [--full]
+
+writes the timings + speedup ratios as machine-readable JSON, gated against
+the checked-in baseline by benchmarks/check_bench.py.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -39,7 +51,8 @@ def _timed(fn):
     return cold, time.perf_counter() - t0
 
 
-def run(quick: bool = False):
+def run_structured(quick: bool = False) -> dict:
+    """All timings + derived speedup ratios as one JSON-ready dict."""
     M, dim = 32, 16
     num_steps = 400 if quick else 1000
     n_seeds = 8 if quick else 16
@@ -67,26 +80,82 @@ def run(quick: bool = False):
             prox_solver="spectral",
         ).dist_sq,
     }
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        variants["shard/spectral"] = lambda: run_batch(
+            "svrp", prob, grid=grid, seeds=n_seeds, num_steps=num_steps,
+            prox_solver="spectral", shard="data",
+        ).dist_sq
 
-    rows = []
-    warm = {}
+    warm_us, cold_s = {}, {}
     for name, fn in variants.items():
         cold, w = _timed(fn)
-        warm[name] = w
-        rows.append((f"svrp_{name}_B{B}", w * 1e6,
-                     f"steps={num_steps};cold_s={cold:.2f}"))
+        warm_us[name] = w * 1e6
+        cold_s[name] = cold
 
-    headline = warm["loop/exact"] / warm["batch/spectral"]
+    speedups = {
+        "batch_spectral_vs_loop_exact": warm_us["loop/exact"] / warm_us["batch/spectral"],
+        "batch_spectral_vs_loop_spectral": (
+            warm_us["loop/spectral"] / warm_us["batch/spectral"]
+        ),
+        "batch_exact_vs_loop_exact": warm_us["loop/exact"] / warm_us["batch/exact"],
+    }
+    if "shard/spectral" in warm_us:
+        speedups["shard_spectral_vs_batch_spectral"] = (
+            warm_us["batch/spectral"] / warm_us["shard/spectral"]
+        )
+
+    return {
+        "bench": "sweep_bench",
+        "algo": "svrp",
+        "config": {"M": M, "dim": dim, "num_steps": num_steps, "seeds": n_seeds, "B": B},
+        "env": {"platform": jax.devices()[0].platform, "device_count": n_dev,
+                "jax": jax.__version__},
+        "timings_us": warm_us,
+        "cold_compile_s": cold_s,
+        "speedups": speedups,
+    }
+
+
+def _rows_from(data: dict) -> list:
+    """The legacy ``(name, us, derived)`` rows benchmarks/run.py prints."""
+    B = data["config"]["B"]
+    steps = data["config"]["num_steps"]
+    rows = [
+        (f"svrp_{name}_B{B}", us, f"steps={steps};cold_s={data['cold_compile_s'][name]:.2f}")
+        for name, us in data["timings_us"].items()
+    ]
+    sp = data["speedups"]
     rows.append((
-        f"svrp_speedup_B{B}", warm["batch/spectral"] * 1e6,
-        f"batch_spectral_vs_loop_exact={headline:.1f}x;"
-        f"vs_loop_spectral={warm['loop/spectral'] / warm['batch/spectral']:.1f}x;"
-        f"batch_exact_vs_loop_exact={warm['loop/exact'] / warm['batch/exact']:.1f}x",
+        f"svrp_speedup_B{B}", data["timings_us"]["batch/spectral"],
+        f"batch_spectral_vs_loop_exact={sp['batch_spectral_vs_loop_exact']:.1f}x;"
+        f"vs_loop_spectral={sp['batch_spectral_vs_loop_spectral']:.1f}x;"
+        f"batch_exact_vs_loop_exact={sp['batch_exact_vs_loop_exact']:.1f}x",
     ))
     return rows
 
 
-if __name__ == "__main__":
+def run(quick: bool = False):
+    return _rows_from(run_structured(quick=quick))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale timing (slow)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable results to PATH")
+    args = ap.parse_args()
+
+    data = run_structured(quick=not args.full)
     print("name,us_per_call,derived")
-    for name, us, derived in run(quick=True):
+    for name, us, derived in _rows_from(data):
         print(f"{name},{us:.0f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -73,11 +73,67 @@ def joint_prox_fista(
     return y_fin
 
 
+class CompositeSVRPParams(NamedTuple):
+    """Traced per-trial hyperparameters (vmap axis of the experiment engine)."""
+
+    eta: jax.Array  # prox stepsize
+    p: jax.Array  # anchor-refresh probability
+    smoothness: jax.Array  # per-client L (FISTA stepsize of the joint prox)
+    mu: jax.Array  # strong convexity (FISTA momentum of the joint prox)
+
+
 class _State(NamedTuple):
     x: jax.Array
     w: jax.Array
     gbar: jax.Array
     comm: jax.Array
+
+
+def composite_svrp_scan(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    key: jax.Array,
+    hp: CompositeSVRPParams,
+    *,
+    num_steps: int,
+    prox_R: Callable,
+    prox_steps: int = 80,
+) -> RunResult:
+    """Algorithm 4 as a pure lax.scan — jit- AND vmap-safe.
+
+    All hyperparameters (`eta`, `p`, `smoothness`, `mu`) are traced scalars in
+    `hp`; `prox_R` (the regularizer's prox) and the step counts are static
+    config, so the batched experiment engine can sweep stepsizes x seeds of
+    the composite method in one compilation (`run_batch("composite", ...)`).
+    `x_star` must be the COMPOSITE minimizer (e.g. `composite_minimizer_pgd`),
+    not `problem.minimizer()`.
+    """
+    M = problem.num_clients
+    eta = jnp.asarray(hp.eta, x0.dtype)
+    p = jnp.asarray(hp.p, x0.dtype)
+    init = _State(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
+
+    def step(s: _State, key_k):
+        key_m, key_c = jax.random.split(key_k)
+        m = jax.random.randint(key_m, (), 0, M)
+        g_k = s.gbar - problem.grad(m, s.w)
+        z = s.x - eta * g_k
+        x_next = joint_prox_fista(
+            lambda y: problem.grad(m, y), prox_R, z, eta, hp.smoothness, hp.mu, prox_steps
+        )
+        c = jax.random.bernoulli(key_c, p)
+        w_next = jnp.where(c, x_next, s.w)
+        gbar_next = jax.lax.cond(c, lambda: problem.full_grad(w_next), lambda: s.gbar)
+        comm = s.comm + 2 + 3 * M * c.astype(jnp.int32)
+        return _State(x_next, w_next, gbar_next, comm), (
+            jnp.sum((x_next - x_star) ** 2),
+            comm,
+        )
+
+    keys = jax.random.split(key, num_steps)
+    fin, (d2s, comms) = jax.lax.scan(step, init, keys)
+    return RunResult(d2s, comms, fin.x)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "prox_steps", "prox_R"))
@@ -96,29 +152,16 @@ def run_composite_svrp(
     prox_steps: int = 80,
 ) -> RunResult:
     """Algorithm 4 with the joint prox solved by FISTA to machine-ish accuracy."""
-    M = problem.num_clients
-    init = _State(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
-
-    def step(s: _State, key_k):
-        key_m, key_c = jax.random.split(key_k)
-        m = jax.random.randint(key_m, (), 0, M)
-        g_k = s.gbar - problem.grad(m, s.w)
-        z = s.x - eta * g_k
-        x_next = joint_prox_fista(
-            lambda y: problem.grad(m, y), prox_R, z, eta, smoothness, mu, prox_steps
-        )
-        c = jax.random.bernoulli(key_c, p)
-        w_next = jnp.where(c, x_next, s.w)
-        gbar_next = jax.lax.cond(c, lambda: problem.full_grad(w_next), lambda: s.gbar)
-        comm = s.comm + 2 + 3 * M * c.astype(jnp.int32)
-        return _State(x_next, w_next, gbar_next, comm), (
-            jnp.sum((x_next - x_star) ** 2),
-            comm,
-        )
-
-    keys = jax.random.split(key, num_steps)
-    fin, (d2s, comms) = jax.lax.scan(step, init, keys)
-    return RunResult(d2s, comms, fin.x)
+    hp = CompositeSVRPParams(
+        eta=jnp.asarray(eta),
+        p=jnp.asarray(p),
+        smoothness=jnp.asarray(smoothness),
+        mu=jnp.asarray(mu),
+    )
+    return composite_svrp_scan(
+        problem, x0, x_star, key, hp,
+        num_steps=num_steps, prox_R=prox_R, prox_steps=prox_steps,
+    )
 
 
 def composite_minimizer_pgd(problem, prox_R, *, L, num_steps: int = 5000) -> jax.Array:

@@ -24,11 +24,14 @@ All functions are pure and cohort-local: `axis_name=None` runs the single
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import RunResult
+from repro.kernels.ref import prox_update as _prox_update_ref
 from repro.utils.tree import (
     tree_add,
     tree_axpy,
@@ -137,6 +140,113 @@ def deep_svrp_round(
         rng=state.rng,
     )
     return new_state, loss_val
+
+
+# ------------------------------------------------- convex scan-driver form
+class DeepSVRPScanParams(NamedTuple):
+    """Traced per-trial hyperparameters (vmap axis of the experiment engine)."""
+
+    eta: jax.Array  # server prox stepsize
+    local_lr: jax.Array  # Algorithm 7's beta
+    anchor_prob: jax.Array  # p — Bernoulli anchor-refresh probability
+
+
+class _DeepScanState(NamedTuple):
+    x: jax.Array
+    w: jax.Array
+    gbar: jax.Array
+    comm: jax.Array
+
+
+def deep_svrp_scan(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    key: jax.Array,
+    hp: DeepSVRPScanParams,
+    *,
+    num_steps: int,
+    local_steps: int = 4,
+) -> RunResult:
+    """DeepSVRP's full-participation pod schedule on a convex problem.
+
+    The same `(problem, x0, x_star, key, hparams) -> RunResult` scan-driver
+    shape as `svrp_scan` — jit- AND vmap-safe, so the batched experiment
+    engine can sweep it (`run_batch("deep_svrp", ...)`).  Every client is a
+    cohort and all M step concurrently each round (the datacenter deviation
+    recorded in the module docstring), replacing `deep_svrp_round`'s pytree
+    arithmetic with a vmapped `(M, d)` inner loop:
+
+      1. per-cohort control variate  g^m = gbar - grad f_m(w)
+      2. prox target                 z^m = x - eta g^m
+      3. K prox-GD steps             y <- y - beta (grad f_m(y) + (y - z^m)/eta)
+      4. aggregate                   x' = mean_m y^m
+      5. anchor refresh w.p. p       w <- x', gbar <- grad f(w)
+
+    Communication accounting (full participation): 2M per round (x down / y up
+    for all M cohorts) + a Bernoulli-gated 2M for the anchor-gradient
+    all-reduce, after the 3M init round.  Used by tests as the per-trial
+    oracle and by the engine (standard + fused + sharded paths).
+    """
+    M = problem.num_clients
+    d = x0.shape[-1]
+    eta = jnp.asarray(hp.eta, x0.dtype)
+    # The canonical Algorithm-7 update (kernels.ref.prox_update) uses
+    # reciprocal-multiply, bit-identical to the fused Pallas kernel.
+    inv_eta = 1.0 / eta
+    beta = jnp.asarray(hp.local_lr, x0.dtype)
+    p = jnp.asarray(hp.anchor_prob, x0.dtype)
+    clients = jnp.arange(M)
+    grad_all = jax.vmap(problem.grad, in_axes=(0, None))  # w -> (M, d)
+    grad_rows = jax.vmap(problem.grad)  # (M,), (M, d) -> (M, d)
+    init = _DeepScanState(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
+
+    def step(s: _DeepScanState, key_k):
+        g_k = s.gbar[None, :] - grad_all(clients, s.w)  # (M, d)
+        z = s.x[None, :] - eta * g_k
+
+        def local(y, _):
+            return _prox_update_ref(y, grad_rows(clients, y), z, beta, inv_eta), None
+
+        y, _ = jax.lax.scan(local, jnp.broadcast_to(s.x, (M, d)), None, length=local_steps)
+        x_next = jnp.mean(y, axis=0)
+
+        c = jax.random.bernoulli(key_k, p)
+        w_next = jnp.where(c, x_next, s.w)
+        gbar_next = jax.lax.cond(c, lambda: problem.full_grad(w_next), lambda: s.gbar)
+        comm = s.comm + 2 * M + 2 * M * c.astype(jnp.int32)
+        return _DeepScanState(x_next, w_next, gbar_next, comm), (
+            jnp.sum((x_next - x_star) ** 2),
+            comm,
+        )
+
+    keys = jax.random.split(key, num_steps)
+    fin, (d2s, comms) = jax.lax.scan(step, init, keys)
+    return RunResult(d2s, comms, fin.x)
+
+
+@partial(jax.jit, static_argnames=("num_steps", "local_steps"))
+def run_deep_svrp(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    eta: float,
+    local_lr: float,
+    anchor_prob: float,
+    num_steps: int,
+    key: jax.Array,
+    local_steps: int = 4,
+) -> RunResult:
+    """Jitted float-argument wrapper around `deep_svrp_scan`."""
+    hp = DeepSVRPScanParams(
+        eta=jnp.asarray(eta),
+        local_lr=jnp.asarray(local_lr),
+        anchor_prob=jnp.asarray(anchor_prob),
+    )
+    return deep_svrp_scan(
+        problem, x0, x_star, key, hp, num_steps=num_steps, local_steps=local_steps
+    )
 
 
 # ----------------------------------------------------------------- baselines

@@ -1,8 +1,11 @@
 """Batched multi-trial experiment engine (seeds x hyperparameter sweeps).
 
-`run_batch` vmaps the paper-faithful `*_scan` drivers over a `(B,)` trial
-axis in a single jit; `run_sequential` is the per-trial Python loop it
-replaces (kept as the equivalence oracle and benchmark baseline).
+`run_batch` vmaps the paper-faithful `*_scan` drivers (svrp/sppm/catalyzed/
+minibatch/baselines, plus composite and deep_svrp) over a `(B,)` trial axis
+in a single jit; `shard="data"` lays that axis over the device mesh via
+shard_map, one fully-local block of trials per device.  `run_sequential` is
+the per-trial Python loop it replaces (kept as the equivalence oracle and
+benchmark baseline).
 """
 from repro.experiments.grid import expand_grid, grid_size, trial_labels, with_seeds
 from repro.experiments.runner import (

@@ -20,9 +20,25 @@ import numpy as np
 
 
 def _as_axis(value) -> np.ndarray:
-    arr = np.asarray(value, dtype=np.float64)
+    arr = np.asarray(value)
     if arr.ndim > 1:
         raise ValueError(f"grid axis must be scalar or 1-D, got shape {arr.shape}")
+    # Preserve integer axes exactly (client counts, inner-iteration budgets,
+    # cohort sizes): a blanket float64 coercion silently corrupts values above
+    # 2^53 and changes the dtype the scan drivers trace with.  Everything
+    # non-integer keeps the old float64 behavior.
+    if np.issubdtype(arr.dtype, np.integer):
+        as64 = arr.astype(np.int64)
+        # uint64 values above int64 max wrap NEGATIVE under the cast (the
+        # int64<->uint64 round-trip is bijective, so compare signs, not bits).
+        if np.issubdtype(arr.dtype, np.unsignedinteger) and bool((as64 < 0).any()):
+            raise OverflowError(
+                f"integer grid axis value exceeds int64 (dtype {arr.dtype}) "
+                "— exactness cannot be preserved"
+            )
+        arr = as64
+    else:
+        arr = arr.astype(np.float64)
     return np.atleast_1d(arr)
 
 
@@ -35,10 +51,11 @@ def grid_size(axes: Mapping[str, object]) -> int:
 
 
 def expand_grid(**axes) -> dict[str, np.ndarray]:
-    """Cartesian product of the given axes as flat (B,) float64 arrays.
+    """Cartesian product of the given axes as flat (B,) arrays.
 
     Scalars participate as length-1 axes (pure broadcast).  The first-named
-    axis varies slowest, matching ``np.meshgrid(indexing="ij")``.
+    axis varies slowest, matching ``np.meshgrid(indexing="ij")``.  Float axes
+    expand as float64; integer axes stay int64 (exact).
     """
     if not axes:
         return {}
@@ -74,11 +91,15 @@ def with_seeds(
 
 def trial_labels(
     hparams: Mapping[str, np.ndarray], seeds: np.ndarray
-) -> list[dict[str, float]]:
-    """Per-trial `{name: value, "seed": s}` dicts for CSV/labeling."""
+) -> list[dict[str, float | int]]:
+    """Per-trial `{name: value, "seed": s}` dicts for CSV/labeling.
+
+    Values keep their axis dtype: integer axes label as python ints, float
+    axes as python floats (see `_as_axis`).
+    """
     out = []
     for i in range(seeds.shape[0]):
-        row: dict[str, float] = {k: float(v[i]) for k, v in hparams.items()}
+        row: dict[str, float | int] = {k: v[i].item() for k, v in hparams.items()}
         row["seed"] = int(seeds[i])
         out.append(row)
     return out

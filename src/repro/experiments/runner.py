@@ -34,6 +34,12 @@ The `fused=True` path for the "gd" prox solver additionally hand-batches the
 scan state to `(B, d)` and routes the Algorithm-7 inner loop through the
 batched Pallas kernel (`kernels.prox_update_batched`), keeping the sweep's
 hot loop a single fused launch per GD step.
+
+`shard="data"` lays the `(B,)` trial axis over the local device mesh via
+shard_map (one group of trials per device), padding B up to a multiple of the
+device count with duplicate trials and masking the pad out of the returned
+result — each device runs its own vmapped (or fused-Pallas) block of the
+sweep with zero cross-device collectives.
 """
 from __future__ import annotations
 
@@ -44,6 +50,7 @@ from typing import Any, Callable, Mapping, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.baselines import (
     AccEGParams,
@@ -58,12 +65,15 @@ from repro.core.baselines import (
     svrg_scan,
 )
 from repro.core.catalyst import CatalyzedSVRPParams, catalyzed_svrp_scan
+from repro.core.composite import CompositeSVRPParams, composite_svrp_scan
+from repro.core.deep import DeepSVRPScanParams, deep_svrp_scan
 from repro.core.minibatch import MinibatchParams, svrp_minibatch_scan
 from repro.core.prox import prox_gd_batched
 from repro.core.sppm import SPPMParams, sppm_scan
 from repro.core.svrp import SVRPParams, svrp_scan
 from repro.core.types import RunResult
 from repro.experiments.grid import expand_grid, trial_labels, with_seeds
+from repro.utils.shard import shard_map_compat
 
 _REQUIRED = object()
 
@@ -83,6 +93,7 @@ class AlgoSpec:
     static: Mapping[str, Any]
     fusable: bool = False  # has a hand-batched fused-kernel "gd" path
     deterministic: bool = False  # ignores the PRNG key; run_batch rejects multi-seed sweeps
+    requires_x_star: bool = False  # problem.minimizer() is NOT the right reference point
 
 
 _PROX_STATIC = {"num_steps": _REQUIRED, "prox_solver": "exact", "prox_steps": 50}
@@ -140,6 +151,25 @@ ALGOS: dict[str, AlgoSpec] = {
         defaults={"theta": _REQUIRED, "mu": _REQUIRED},
         static={"num_rounds": _REQUIRED, "surrogate_client": 0},
         deterministic=True,
+    ),
+    "composite": AlgoSpec(
+        CompositeSVRPParams, composite_svrp_scan,
+        defaults={
+            "eta": _REQUIRED, "p": _REQUIRED,
+            "smoothness": _REQUIRED, "mu": _REQUIRED,
+        },
+        # NOTE: prox_R is part of the static config and therefore of the
+        # runner cache key — pass a STABLE callable (module-level fn or one
+        # construction reused across calls); a fresh closure per call would
+        # retrace and recompile the whole sweep every time.
+        static={"num_steps": _REQUIRED, "prox_R": _REQUIRED, "prox_steps": 80},
+        requires_x_star=True,  # dist_sq must be measured to the COMPOSITE optimum
+    ),
+    "deep_svrp": AlgoSpec(
+        DeepSVRPScanParams, deep_svrp_scan,
+        defaults={"eta": _REQUIRED, "local_lr": _REQUIRED, "anchor_prob": _REQUIRED},
+        static={"num_steps": _REQUIRED, "local_steps": 4},
+        fusable=True,  # its local solver IS Algorithm 7 (no prox_solver switch)
     ),
 }
 
@@ -233,6 +263,13 @@ def _one_trial_fn(scan_fn: Callable, static_items: tuple) -> Callable:
 
 
 @functools.lru_cache(maxsize=None)
+def _vmapped_trials(scan_fn: Callable, static_items: tuple) -> Callable:
+    """The unjitted `(B,)`-vmapped driver — shared by the single-device jit
+    path (`_batched_runner`) and the per-device body of the sharded path."""
+    return jax.vmap(_one_trial_fn(scan_fn, static_items), in_axes=(None, None, None, 0, 0))
+
+
+@functools.lru_cache(maxsize=None)
 def _batched_runner(scan_fn: Callable, static_items: tuple) -> Callable:
     """One jitted vmapped driver per (scan_fn, static-config) pair.
 
@@ -240,9 +277,7 @@ def _batched_runner(scan_fn: Callable, static_items: tuple) -> Callable:
     leading `(B,)` axis on `keys` and every `hp` leaf; jax's jit cache then
     keys on shapes/dtypes, so repeated sweeps of the same size compile once.
     """
-    return jax.jit(
-        jax.vmap(_one_trial_fn(scan_fn, static_items), in_axes=(None, None, None, 0, 0))
-    )
+    return jax.jit(_vmapped_trials(scan_fn, static_items))
 
 
 @functools.lru_cache(maxsize=None)
@@ -273,6 +308,12 @@ def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star
     if x0 is None:
         x0 = jnp.zeros(problem.dim, dtype=problem.A.dtype if hasattr(problem, "A") else None)
     if x_star is None:
+        if spec.requires_x_star:
+            raise ValueError(
+                f"{algo}: pass x_star explicitly — problem.minimizer() is the "
+                "UNCONSTRAINED optimum, not this algorithm's reference point "
+                "(use e.g. composite_minimizer_pgd)"
+            )
         x_star = problem.minimizer()
     return hparams, seed_arr, cfg, x0, x_star
 
@@ -280,6 +321,27 @@ def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star
 def _keys_for(seeds: np.ndarray) -> jax.Array:
     """(B,) typed PRNG keys; trial s reproduces jax.random.key(s) exactly."""
     return jax.vmap(jax.random.key)(jnp.asarray(seeds, dtype=jnp.uint32))
+
+
+def _device_hparams(hparams: Mapping[str, np.ndarray]) -> dict[str, jax.Array]:
+    """Host grid arrays -> device arrays, refusing silent integer narrowing.
+
+    grid.py keeps integer axes exact as int64; without jax_enable_x64 the
+    device conversion narrows to int32, which would silently wrap the very
+    values the grid layer preserves — make that loud instead.
+    """
+    out = {}
+    for k, v in hparams.items():
+        arr = jnp.asarray(v)
+        if np.issubdtype(np.asarray(v).dtype, np.integer) and not np.array_equal(
+            np.asarray(arr, dtype=np.int64), np.asarray(v, dtype=np.int64)
+        ):
+            raise OverflowError(
+                f"integer hparam {k!r} does not fit the device integer width "
+                f"({arr.dtype}); enable jax_enable_x64 for int64 hparams"
+            )
+        out[k] = arr
+    return out
 
 
 def run_batch(
@@ -292,6 +354,8 @@ def run_batch(
     x_star: jax.Array | None = None,
     fused: bool = False,
     interpret: bool | None = None,
+    shard: str | None = None,
+    devices: Sequence[Any] | None = None,
     **static,
 ) -> BatchResult:
     """Run `seeds x grid` trials of `algo` on `problem` in ONE jitted vmap.
@@ -302,36 +366,58 @@ def run_batch(
     (seed-major).  Remaining kwargs are the algo's static config (num_steps,
     prox_solver, ...), shared by every trial.
 
-    `fused=True` (svrp/sppm with prox_solver="gd" only) switches to the
-    hand-batched driver whose Algorithm-7 inner loop runs through the batched
-    Pallas prox kernel; `interpret` (fused-only) selects the kernel's
-    interpreter mode and defaults to True, the CPU-safe choice — pass
-    interpret=False on real TPU hardware to compile the kernel.
+    `fused=True` (fusable algos running Algorithm 7: svrp/sppm with
+    prox_solver="gd", and deep_svrp always) switches to the hand-batched
+    driver whose inner loop runs through the batched Pallas prox kernel;
+    `interpret` (fused-only) selects the kernel's interpreter mode and
+    defaults to True, the CPU-safe choice — pass interpret=False on real TPU
+    hardware to compile the kernel.
+
+    `shard="data"` additionally lays the `(B,)` trial axis over the device
+    mesh (`devices` defaults to all local devices): B is padded up to a
+    multiple of the device count with duplicates of the last trial, each
+    device runs its own contiguous block of trials as a fully local vmapped
+    (or fused-Pallas) sweep — no cross-device collectives — and the pad is
+    masked out of the returned BatchResult, so `summary()` and per-trial
+    access see exactly the requested B trials.
 
     Per-trial outputs match the sequential `run_<algo>` driver for the same
-    (seed, hparams) to float tolerance — see tests/test_experiments.py.
+    (seed, hparams) to float tolerance — see tests/test_experiments.py and
+    tests/test_sharded.py.
     """
     spec = _resolve(algo)
     hparams, seed_arr, cfg, x0, x_star = _prepare(
         spec, algo, problem, grid, seeds, static, x0, x_star
     )
 
-    hp = spec.params_cls(**{k: jnp.asarray(v) for k, v in hparams.items()})
+    hp = spec.params_cls(**_device_hparams(hparams))
     keys = _keys_for(seed_arr)
 
+    if shard not in (None, "data"):
+        raise ValueError(f"unknown shard mode {shard!r}; supported: 'data'")
+    if devices is not None and shard is None:
+        raise ValueError("devices= only applies with shard='data' (did you forget it?)")
     if fused:
-        if not (spec.fusable and cfg.get("prox_solver") == "gd"):
+        # svrp/sppm fuse only their "gd" prox path; deep_svrp's local solver
+        # IS Algorithm 7, so it has no prox_solver switch to check.
+        if not (spec.fusable and cfg.get("prox_solver", "gd") == "gd"):
             raise ValueError(
                 f"{algo}: fused=True requires a fusable algo with prox_solver='gd'"
             )
         interpret = True if interpret is None else interpret
-        runner = _fused_runner(algo, cfg["num_steps"], cfg["prox_steps"], interpret)
-        res = runner(problem, x0, x_star, keys, hp)
+        inner = cfg["prox_steps"] if "prox_steps" in cfg else cfg["local_steps"]
+        body = _fused_body(algo, cfg["num_steps"], inner, interpret)
+        runner = _fused_runner(algo, cfg["num_steps"], inner, interpret)
     else:
         if interpret is not None:
             raise ValueError("interpret only applies to the fused=True Pallas path")
+        body = _vmapped_trials(spec.scan_fn, tuple(sorted(cfg.items())))
         runner = _batched_runner(spec.scan_fn, tuple(sorted(cfg.items())))
+
+    if shard is None:
         res = runner(problem, x0, x_star, keys, hp)
+    else:
+        res = _run_sharded(body, problem, x0, x_star, keys, hp, devices)
 
     return BatchResult(
         dist_sq=res.dist_sq,
@@ -364,9 +450,10 @@ def run_sequential(
     )
 
     single = _single_runner(spec.scan_fn, tuple(sorted(cfg.items())))
+    dev_hp = _device_hparams(hparams)
     results = []
     for i in range(seed_arr.shape[0]):
-        hp = spec.params_cls(**{k: jnp.asarray(v[i]) for k, v in hparams.items()})
+        hp = spec.params_cls(**{k: v[i] for k, v in dev_hp.items()})
         results.append(single(problem, x0, x_star, jax.random.key(int(seed_arr[i])), hp))
     return BatchResult(
         dist_sq=jnp.stack([r.dist_sq for r in results]),
@@ -377,24 +464,84 @@ def run_sequential(
     )
 
 
-# ---------------------------------------------------------------- fused "gd" path
-#
-# Hand-batched scans for the approximate-prox ("gd") solver: state is (B, d),
-# sampling is vmapped per-trial (bit-identical key usage to the sequential
-# drivers), and the Algorithm-7 inner loop goes through the batched Pallas
-# kernel so each GD step is one fused launch for the whole sweep.
+# ------------------------------------------------------------- sharded sweeps
+def _pad_rows(a: jax.Array, n_total: int) -> jax.Array:
+    """Pad the leading axis to n_total by repeating the last row (dup trials)."""
+    pad = n_total - a.shape[0]
+    if pad == 0:
+        return a
+    return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_runner(algo: str, num_steps: int, prox_steps: int, interpret: bool) -> Callable:
-    step_fused = {"svrp": _svrp_step_fused, "sppm": _sppm_step_fused}[algo]
+def _sharded_runner(body: Callable, devices: tuple) -> Callable:
+    """shard_map `body` (a `(B,)`-vmapped or hand-batched sweep driver) over a
+    1-D ('data',) mesh of `devices`, one contiguous block of trials per device.
+
+    The body runs fully locally on each device's trial block — the lowered
+    module contains ZERO cross-device collectives; PRNG keys travel as uint32
+    key-data (typed key arrays don't cross the shard_map boundary on older
+    jax).  Cached per (body, devices) so repeated sweeps of the same shape
+    compile once, mirroring `_batched_runner`.
+    """
+    from repro.launch.mesh import make_sweep_mesh
+
+    mesh = make_sweep_mesh(devices)
+
+    def local_block(problem, x0, x_star, key_data, hp):
+        keys = jax.random.wrap_key_data(key_data)
+        return body(problem, x0, x_star, keys, hp)
+
+    smapped = shard_map_compat(
+        local_block,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P("data"), P("data")),
+        out_specs=P("data"),
+        manual_axes=("data",),
+    )
+    return jax.jit(smapped)
+
+
+def _run_sharded(body, problem, x0, x_star, keys, hp, devices) -> RunResult:
+    devs = tuple(jax.devices()) if devices is None else tuple(devices)
+    n = len(devs)
+    B = keys.shape[0]
+    B_pad = B + (-B) % n
+    key_data = _pad_rows(jax.random.key_data(keys), B_pad)
+    hp_pad = jax.tree.map(lambda a: _pad_rows(jnp.asarray(a), B_pad), hp)
+    res = _sharded_runner(body, devs)(problem, x0, x_star, key_data, hp_pad)
+    # Mask the pad back out: callers (summary/trial/labels) only ever see the
+    # B requested trials.
+    return jax.tree.map(lambda a: a[:B], res)
+
+
+# ---------------------------------------------------------------- fused "gd" path
+#
+# Hand-batched scans for the approximate-prox (Algorithm 7) solvers: state is
+# (B, d), sampling is vmapped per-trial (bit-identical key usage to the
+# sequential drivers), and the inner prox-GD loop goes through the batched
+# Pallas kernel so each GD step is one fused launch for the whole sweep —
+# per device, under shard="data".
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_body(algo: str, num_steps: int, prox_steps: int, interpret: bool) -> Callable:
+    """The unjitted hand-batched driver (jitted by `_fused_runner`; shard-mapped
+    raw by the sharded path so each device runs its own fused block)."""
+    step_fused = {
+        "svrp": _svrp_step_fused,
+        "sppm": _sppm_step_fused,
+        "deep_svrp": _deep_svrp_step_fused,
+    }[algo]
 
     def run(problem, x0, x_star, keys, hp):
         B = keys.shape[0]
         d = x0.shape[-1]
         M = problem.num_clients
         eta = jnp.broadcast_to(jnp.asarray(hp.eta, x0.dtype), (B,))
-        L = jnp.broadcast_to(jnp.asarray(hp.smoothness, x0.dtype), (B,))
+        L = jnp.broadcast_to(
+            jnp.asarray(getattr(hp, "smoothness", 0.0), x0.dtype), (B,)
+        )
         xB = jnp.broadcast_to(x0, (B, d))
 
         # Per-trial per-step keys, identical to jax.random.split in the
@@ -417,7 +564,12 @@ def _fused_runner(algo: str, num_steps: int, prox_steps: int, interpret: bool) -
             x_final=final[0],
         )
 
-    return jax.jit(run)
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_runner(algo: str, num_steps: int, prox_steps: int, interpret: bool) -> Callable:
+    return jax.jit(_fused_body(algo, num_steps, prox_steps, interpret))
 
 
 def _fused_init(algo, problem, hp, xB, x0, B, M):
@@ -426,6 +578,12 @@ def _fused_init(algo, problem, hp, xB, x0, B, M):
         comm = jnp.full((B,), 3 * M)
         p = jnp.broadcast_to(jnp.asarray(hp.p, x0.dtype), (B,))
         return (xB, xB, gbar, comm), (p,)
+    if algo == "deep_svrp":
+        gbar = jnp.broadcast_to(problem.full_grad(x0), xB.shape)
+        comm = jnp.full((B,), 3 * M)
+        p = jnp.broadcast_to(jnp.asarray(hp.anchor_prob, x0.dtype), (B,))
+        beta = jnp.broadcast_to(jnp.asarray(hp.local_lr, x0.dtype), (B,))
+        return (xB, xB, gbar, comm), (p, beta)
     comm = jnp.zeros((B,), dtype=jnp.asarray(0).dtype)
     return (xB, comm), ()
 
@@ -462,5 +620,47 @@ def _svrp_step_fused(problem, state, keys_k, eta, L, x_star, prox_steps, interpr
     w_next = jnp.where(c[:, None], x_next, w)
     gbar_next = jnp.where(c[:, None], jax.vmap(problem.full_grad)(w_next), gbar)
     comm = comm + 2 + 3 * M * c.astype(jnp.int32)
+    d2 = jnp.sum((x_next - x_star[None]) ** 2, axis=-1)
+    return (x_next, w_next, gbar_next, comm), (d2, comm)
+
+
+def _deep_svrp_step_fused(
+    problem, state, keys_k, eta, L, x_star, local_steps, interpret, extras
+):
+    """DeepSVRP's full-participation round, hand-batched to (B*M, d) rows so
+    the K local prox-GD steps of EVERY cohort of EVERY trial are one batched
+    Pallas launch each (per-row scalars: trial b's local_lr / 1/eta)."""
+    from repro.kernels.prox_update import prox_update_batched
+
+    x, w, gbar, comm = state
+    p, beta = extras
+    B, d = x.shape
+    M = problem.num_clients
+    clients = jnp.arange(M)
+    grad_rows = jax.vmap(problem.grad)
+
+    g_anchor = jax.vmap(
+        lambda wb: jax.vmap(problem.grad, in_axes=(0, None))(clients, wb)
+    )(w)  # (B, M, d)
+    z = x[:, None, :] - eta[:, None, None] * (gbar[:, None, :] - g_anchor)
+    z_rows = z.reshape(B * M, d)
+    m_rows = jnp.tile(clients, B)
+    beta_rows = jnp.repeat(beta, M)
+    inv_eta_rows = jnp.repeat(1.0 / eta, M)
+
+    def body(_, y):
+        g = grad_rows(m_rows, y)
+        return prox_update_batched(
+            y, g, z_rows, beta_rows, inv_eta_rows, interpret=interpret
+        )
+
+    y0 = jnp.broadcast_to(x[:, None, :], (B, M, d)).reshape(B * M, d)
+    y = jax.lax.fori_loop(0, local_steps, body, y0)
+    x_next = jnp.mean(y.reshape(B, M, d), axis=1)
+
+    c = jax.vmap(jax.random.bernoulli)(keys_k, p)
+    w_next = jnp.where(c[:, None], x_next, w)
+    gbar_next = jnp.where(c[:, None], jax.vmap(problem.full_grad)(w_next), gbar)
+    comm = comm + 2 * M + 2 * M * c.astype(jnp.int32)
     d2 = jnp.sum((x_next - x_star[None]) ** 2, axis=-1)
     return (x_next, w_next, gbar_next, comm), (d2, comm)

@@ -38,6 +38,18 @@ def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int | None = None):
     return _make_mesh((data, model), ("data", "model"))
 
 
+def make_sweep_mesh(devices=None):
+    """1-D ('data',) mesh over `devices` (default: all local devices) — the
+    trial-sharding mesh of the experiment engine's `run_batch(shard="data")`.
+
+    Returned as a plain `jax.sharding.Mesh` (no Auto/Explicit axis types:
+    the engine shard_maps every axis manually)."""
+    import numpy as np
+
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return jax.sharding.Mesh(np.array(devs), ("data",))
+
+
 def data_axis_names(mesh) -> tuple[str, ...]:
     """The client/cohort axes: ('pod', 'data') when multi-pod else ('data',)."""
     return tuple(n for n in mesh.axis_names if n in ("pod", "data"))

@@ -33,30 +33,13 @@ from repro.launch import sharding as shd
 from repro.launch.mesh import data_axis_names, num_cohorts
 from repro.models import model as M
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+# Version-compat shard_map lives in utils.shard (shared with the experiment
+# engine's sharded sweep mode).
+from repro.utils.shard import shard_map_compat as _shard_map_compat
 from repro.utils.tree import tree_where
 
 PyTree = Any
-
-
-def _shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
-    """jax.shard_map across jax versions.
-
-    jax >= 0.6 exposes `jax.shard_map(..., axis_names=manual, check_vma=...)`;
-    older releases spell it `jax.experimental.shard_map.shard_map(...,
-    auto=non_manual, check_rep=...)`.
-    """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=set(manual_axes), check_vma=False,
-        )
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    auto = frozenset(mesh.axis_names) - set(manual_axes)
-    return _shard_map(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=False, auto=auto,
-    )
 
 
 class SVRPServerState(NamedTuple):
@@ -190,18 +173,13 @@ def make_svrp_train_step(cfg: ModelConfig, mesh, svrp: DeepSVRPConfig):
         # (2) prox target z = x - eta g_k
         z = jax.tree.map(lambda xx, g: xx - (svrp.eta * g).astype(xx.dtype), x, g_k)
 
-        # (3) K local prox-GD steps (Algorithm 7; fused prox_update kernel).
+        # (3) K local prox-GD steps (Algorithm 7).  prox_update_tree fuses the
+        #     whole-tree elementwise update into one batched kernel launch per
+        #     dtype on the Pallas path (leaf-wise jnp otherwise).
         def local_step(carry, _):
             y, _ = carry
             g = grad_fn(y, batch)
-            y_next = jax.tree.map(
-                lambda yy, gg, zz: kops.prox_update(
-                    yy, gg.astype(yy.dtype), zz, svrp.local_lr, 1.0 / svrp.eta
-                ),
-                y,
-                g,
-                z,
-            )
+            y_next = kops.prox_update_tree(y, g, z, svrp.local_lr, 1.0 / svrp.eta)
             return (y_next, g), None
 
         (y, g_local_last), _ = jax.lax.scan(

@@ -17,6 +17,28 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
+    """jax.shard_map across jax versions.
+
+    jax >= 0.6 exposes `jax.shard_map(..., axis_names=manual, check_vma=...)`;
+    older releases spell it `jax.experimental.shard_map.shard_map(...,
+    auto=non_manual, check_rep=...)`.  Shared by the launch layer's mesh steps
+    and the experiment engine's `shard="data"` sweep mode.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(manual_axes), check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - set(manual_axes)
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False, auto=auto,
+    )
+
+
 def _active_axes() -> tuple:
     try:
         am = jax.sharding.get_abstract_mesh()

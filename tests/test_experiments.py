@@ -48,6 +48,24 @@ def test_expand_grid_cartesian_product():
     np.testing.assert_allclose(g["s"], 7.0)
 
 
+def test_expand_grid_preserves_integer_dtypes():
+    """Integer axes (client counts, iteration budgets) must stay exact ints:
+    the old blanket float64 coercion silently corrupted values above 2^53."""
+    big = 2**53 + 1  # not representable in float64
+    g = expand_grid(eta=[1e-3, 1e-2], clients=[10, big], budget=3)
+    assert g["clients"].dtype == np.int64 and g["budget"].dtype == np.int64
+    assert g["eta"].dtype == np.float64
+    np.testing.assert_array_equal(g["clients"], [10, big, 10, big])
+    np.testing.assert_array_equal(g["budget"], [3, 3, 3, 3])
+    # labels keep python types per axis
+    from repro.experiments import trial_labels, with_seeds
+
+    hp, seeds = with_seeds(g, 1)
+    labs = trial_labels(hp, seeds)
+    assert isinstance(labs[1]["clients"], int) and labs[1]["clients"] == big
+    assert isinstance(labs[0]["eta"], float)
+
+
 def test_run_batch_validates_inputs(prob):
     with pytest.raises(KeyError):
         run_batch("nope", prob, grid={}, num_steps=5)
@@ -217,6 +235,85 @@ def test_run_batch_catalyzed(prob, theory):
     assert float(jnp.median(res.dist_sq[:, -1])) < 1e-6 * float(res.dist_sq[0, 0])
 
 
+# -------------------------------------------------- composite + deep families
+def test_run_batch_matches_sequential_composite(prob, theory):
+    """run_batch('composite') sweeps Algorithm 4; per-trial == run_composite_svrp."""
+    from repro.core import composite_minimizer_pgd, prox_l2ball, run_composite_svrp
+
+    prox_R = prox_l2ball(0.1)
+    x_star_c = composite_minimizer_pgd(
+        prob, prox_R, L=float(prob.smoothness()), num_steps=20_000
+    )
+    grid = {
+        "eta": [theory["eta"], theory["eta"] / 2], "p": 1 / 24,
+        "smoothness": theory["L"], "mu": theory["mu"],
+    }
+    res = run_batch(
+        "composite", prob, grid=grid, seeds=2, num_steps=120,
+        prox_R=prox_R, x_star=x_star_c,
+    )
+    assert res.num_trials == 4
+    for i, lab in enumerate(res.labels()):
+        r = run_composite_svrp(
+            prob, prox_R, theory["x0"], x_star_c, eta=lab["eta"], p=lab["p"],
+            num_steps=120, key=jax.random.key(lab["seed"]),
+            smoothness=lab["smoothness"], mu=lab["mu"],
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+        )
+        np.testing.assert_array_equal(np.asarray(res.comm[i]), np.asarray(r.comm))
+
+
+def test_run_batch_composite_requires_explicit_x_star(prob, theory):
+    """dist_sq to problem.minimizer() would silently measure the wrong point."""
+    from repro.core import prox_l2ball
+
+    with pytest.raises(ValueError, match="x_star"):
+        run_batch(
+            "composite", prob,
+            grid={"eta": 0.1, "p": 0.1, "smoothness": 1.0, "mu": 1.0},
+            num_steps=5, prox_R=prox_l2ball(0.1),
+        )
+
+
+def test_run_batch_matches_sequential_deep_svrp(prob, theory):
+    """run_batch('deep_svrp') sweeps the pod schedule; per-trial == run_deep_svrp."""
+    from repro.core import run_deep_svrp
+
+    beta = 0.8 / (theory["L"] + 2.0)  # Algorithm 7 stability: beta < 1/(L + 1/eta)
+    grid = {"eta": 0.5, "local_lr": [beta, beta / 2], "anchor_prob": 0.25}
+    res = run_batch("deep_svrp", prob, grid=grid, seeds=2, num_steps=150, local_steps=6)
+    assert res.num_trials == 4
+    for i, lab in enumerate(res.labels()):
+        r = run_deep_svrp(
+            prob, theory["x0"], theory["x_star"], eta=lab["eta"],
+            local_lr=lab["local_lr"], anchor_prob=lab["anchor_prob"],
+            num_steps=150, local_steps=6, key=jax.random.key(lab["seed"]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+        )
+        np.testing.assert_array_equal(np.asarray(res.comm[i]), np.asarray(r.comm))
+    # and it actually converges at these settings (the beta/2 trials set the
+    # median; measured ~1e-7 relative at 150 rounds)
+    assert float(jnp.median(res.dist_sq[:, -1])) < 1e-5 * float(res.dist_sq[0, 0])
+
+
+def test_deep_svrp_fused_matches_standard(prob, theory):
+    """fused=True routes all B x M cohort prox loops through ONE batched
+    Pallas launch per GD step; numerics must track the standard driver."""
+    beta = 0.8 / (theory["L"] + 2.0)
+    grid = {"eta": 0.5, "local_lr": beta, "anchor_prob": 0.25}
+    kw = dict(seeds=2, num_steps=100, local_steps=6)
+    r_f = run_batch("deep_svrp", prob, grid=grid, fused=True, **kw)
+    r_s = run_batch("deep_svrp", prob, grid=grid, **kw)
+    np.testing.assert_allclose(
+        np.asarray(r_f.dist_sq), np.asarray(r_s.dist_sq), rtol=1e-5, atol=1e-24
+    )
+    np.testing.assert_array_equal(np.asarray(r_f.comm), np.asarray(r_s.comm))
+
+
 # --------------------------------------------------------- spectral + fused paths
 def test_spectral_prox_matches_exact(prob, theory):
     """prox_solver='spectral' (hoisted eigh; the engine's CPU fast path) tracks
@@ -265,6 +362,28 @@ def test_fused_sppm_matches_sequential(prob, theory):
         )
         np.testing.assert_allclose(
             np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-20
+        )
+
+
+# --------------------------------------------------------------- sharded mode
+def test_run_batch_shard_data_direct(prob, theory):
+    """In-process shard='data' (no subprocess): unique coverage for the CI
+    sharded-8dev matrix entry, where the parent already has 8 XLA host
+    devices.  Single-device environments exercise the n=1 degenerate mesh."""
+    grid = {"eta": [theory["eta"], theory["eta"] / 2], "p": 1 / 24}
+    sh = run_batch("svrp", prob, grid=grid, seeds=3, num_steps=80, shard="data")
+    sq = run_sequential("svrp", prob, grid=grid, seeds=3, num_steps=80)
+    np.testing.assert_allclose(
+        np.asarray(sh.dist_sq), np.asarray(sq.dist_sq), rtol=1e-5, atol=1e-24
+    )
+    np.testing.assert_array_equal(np.asarray(sh.comm), np.asarray(sq.comm))
+
+
+def test_run_batch_devices_without_shard_rejected(prob, theory):
+    with pytest.raises(ValueError, match="shard"):
+        run_batch(
+            "svrp", prob, grid={"eta": 0.1, "p": 0.1}, num_steps=5,
+            devices=jax.devices(),
         )
 
 

@@ -142,6 +142,42 @@ def test_prox_gd_batched_kernel_equals_jnp_path():
         np.testing.assert_allclose(np.asarray(out_k[b]), np.asarray(single), rtol=1e-8, atol=1e-10)
 
 
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_prox_update_tree_matches_leafwise(use_pallas):
+    """ops.prox_update_tree == leaf-wise prox_update on a mixed-dtype pytree.
+
+    use_pallas=True exercises the per-dtype concat/split single-launch path
+    (interpret mode) that the DeepSVRP pod step routes through — including
+    the offset bookkeeping across multiple leaves of the same dtype."""
+    from repro.kernels import ops as kops
+
+    ks = jax.random.split(jax.random.key(4), 4)
+    y = {
+        "a": jax.random.normal(ks[0], (3, 37), jnp.float32),
+        "b": jax.random.normal(ks[1], (129,), jnp.float32),
+        "c": jax.random.normal(ks[2], (4, 5), jnp.bfloat16),
+        "d": jax.random.normal(ks[3], (2, 2, 2), jnp.float32),
+    }
+    g = jax.tree.map(lambda x: (x * 0.3).astype(jnp.float32), y)  # f32 grads vs bf16 params
+    z = jax.tree.map(lambda x: x - 0.25, y)
+    want = jax.tree.map(
+        lambda yy, gg, zz: ref.prox_update(yy, gg.astype(yy.dtype), zz, 0.1, 2.0), y, g, z
+    )
+
+    state = (kops._USE_PALLAS, kops._PALLAS_INTERPRET)
+    try:
+        kops.use_pallas(use_pallas, interpret=True)
+        got = kops.prox_update_tree(y, g, z, 0.1, 2.0)
+    finally:
+        kops.use_pallas(*state)
+    for k in y:
+        assert got[k].shape == y[k].shape and got[k].dtype == y[k].dtype, k
+        tol = dict(atol=2e-2, rtol=2e-2) if y[k].dtype == jnp.bfloat16 else dict(rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(got[k], np.float32), np.asarray(want[k], np.float32), **tol
+        )
+
+
 def test_prox_update_under_jit_and_traced_scalars():
     """lr / inv_eta may be traced (come from schedules) — must not retrace-fail."""
     y = jnp.ones((64,))

@@ -1,0 +1,162 @@
+"""Sharded sweep engine: run_batch(shard="data") on 8 simulated CPU devices.
+
+Runs in SUBPROCESSES so the 8-device XLA flag never leaks into the rest of
+the suite (same pattern as test_launch.py).  The acceptance bar from the
+issue: sharded == run_sequential per-trial to <= 1e-5 INCLUDING a trial count
+that does not divide the device count (the pad+mask path), for the classic,
+composite, deep and fused-Pallas families.
+"""
+import os
+import subprocess
+import sys
+
+_ENV_CODE = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.core import theorem2_stepsize
+from repro.experiments import run_batch, run_sequential
+from repro.problems import make_synthetic_quadratic
+
+assert len(jax.devices()) == 8, jax.devices()
+prob = make_synthetic_quadratic(num_clients=12, dim=8, mu=1.0, L=150.0, delta=5.0, seed=3)
+mu = float(prob.strong_convexity())
+delta = float(prob.similarity())
+L = float(prob.smoothness_max())
+eta = theorem2_stepsize(mu, delta)
+
+def check(a, b, rtol=1e-5, atol=1e-24):
+    np.testing.assert_allclose(np.asarray(a.dist_sq), np.asarray(b.dist_sq), rtol=rtol, atol=atol)
+    np.testing.assert_array_equal(np.asarray(a.comm), np.asarray(b.comm))
+    np.testing.assert_allclose(np.asarray(a.x_final), np.asarray(b.x_final), rtol=rtol, atol=1e-12)
+"""
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", _ENV_CODE + code],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=500,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    return r.stdout
+
+
+def test_sharded_svrp_nondivisible_batch_matches_sequential():
+    """B=12 trials on 8 devices: the pad+mask path must be invisible —
+    per-trial results identical to the sequential oracle."""
+    out = _run(
+        """
+grid = {"eta": [eta, eta / 2, 2 * eta], "p": 1 / 12}
+sh = run_batch("svrp", prob, grid=grid, seeds=4, num_steps=150, shard="data")
+sq = run_sequential("svrp", prob, grid=grid, seeds=4, num_steps=150)
+assert sh.dist_sq.shape == (12, 150), sh.dist_sq.shape  # pad masked out
+assert sh.labels() == sq.labels()
+check(sh, sq)
+s = sh.summary()
+assert s["dist_sq_median"].shape == (150,)
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_sharded_spectral_and_divisible_batch():
+    """B=16 on 8 devices (divisible, no pad) with the hoisted-eigh prox."""
+    out = _run(
+        """
+grid = {"eta": [eta, eta / 2], "p": 1 / 12}
+sh = run_batch("svrp", prob, grid=grid, seeds=8, num_steps=150, shard="data",
+               prox_solver="spectral")
+sq = run_sequential("svrp", prob, grid=grid, seeds=8, num_steps=150,
+                    prox_solver="spectral")
+assert sh.dist_sq.shape == (16, 150)
+check(sh, sq)
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_sharded_composite_matches_sequential():
+    out = _run(
+        """
+from repro.core import composite_minimizer_pgd, prox_l2ball
+prox_R = prox_l2ball(0.1)
+x_star_c = composite_minimizer_pgd(prob, prox_R, L=float(prob.smoothness()), num_steps=20000)
+grid = {"eta": [eta, eta / 2], "p": 1 / 12, "smoothness": L, "mu": mu}
+kw = dict(grid=grid, seeds=3, num_steps=100, prox_R=prox_R, x_star=x_star_c)
+sh = run_batch("composite", prob, shard="data", **kw)
+sq = run_sequential("composite", prob, **kw)
+assert sh.dist_sq.shape == (6, 100)
+check(sh, sq)
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_sharded_deep_svrp_standard_and_fused():
+    """deep_svrp sharded (standard + fused-Pallas per-device block) == oracle."""
+    out = _run(
+        """
+beta = 0.8 / (L + 2.0)
+grid = {"eta": 0.5, "local_lr": beta, "anchor_prob": 0.2}
+kw = dict(grid=grid, seeds=4, num_steps=150, local_steps=6)
+sq = run_sequential("deep_svrp", prob, **kw)
+sh = run_batch("deep_svrp", prob, shard="data", **kw)
+check(sh, sq)
+shf = run_batch("deep_svrp", prob, shard="data", fused=True, **kw)
+check(shf, sq)
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_sharded_fused_svrp_gd_matches_unsharded_fused():
+    """fused=True + shard='data': each device runs its own batched-Pallas
+    Algorithm-7 block; B=6 on 8 devices also exercises pad+mask."""
+    out = _run(
+        """
+grid = {"eta": [eta, eta / 2], "p": 1 / 12, "smoothness": L}
+kw = dict(grid=grid, seeds=3, num_steps=50, prox_solver="gd", prox_steps=20, fused=True)
+sh = run_batch("svrp", prob, shard="data", **kw)
+un = run_batch("svrp", prob, **kw)
+assert sh.dist_sq.shape == (6, 50)
+check(sh, un, rtol=1e-6)
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_sharded_lowering_has_no_cross_device_collectives():
+    """Trial sharding is embarrassingly parallel: the compiled sharded sweep
+    must contain no collective ops over the 'data' mesh axis."""
+    out = _run(
+        """
+from repro.experiments.runner import _sharded_runner, _vmapped_trials
+from repro.core.svrp import SVRPParams, svrp_scan
+body = _vmapped_trials(svrp_scan, tuple(sorted(
+    {"num_steps": 20, "prox_solver": "exact", "prox_steps": 50}.items())))
+keys = jax.vmap(jax.random.key)(jnp.arange(16, dtype=jnp.uint32))
+hp = SVRPParams(eta=jnp.full((16,), eta), p=jnp.full((16,), 1 / 12),
+                smoothness=jnp.zeros((16,)))
+x0 = jnp.zeros(prob.dim)
+runner = _sharded_runner(body, tuple(jax.devices()))
+txt = runner.lower(prob, x0, prob.minimizer(), jax.random.key_data(keys), hp)
+txt = txt.compile().as_text()
+for coll in ("all-reduce", "all-gather", "reduce-scatter", "collective-permute", "all-to-all"):
+    assert coll not in txt, coll
+print('OK')
+"""
+    )
+    assert "OK" in out
