@@ -8,6 +8,10 @@ measure what the engine saves, not how fast the host is.  A measured ratio
 below ``--floor`` (default 0.7) times its baseline value fails the job —
 i.e. the PR destroyed >= 30% of the recorded batching win.
 
+A baseline may additionally carry an ``absolute_floors`` map: hard minimums a
+measured ratio must clear regardless of the relative floor (e.g. the logistic
+track's acceptance line "batch-vs-loop >= 5x on CPU").
+
 Exit code 0 = all gated ratios hold; 1 = regression; 2 = malformed input.
 """
 from __future__ import annotations
@@ -23,6 +27,9 @@ GATED = (
     "batch_spectral_vs_loop_exact",
     "batch_spectral_vs_loop_spectral",
     "batch_exact_vs_loop_exact",
+    "logistic_batch_newton_cg_vs_loop_fixed",
+    "logistic_batch_newton_cg_vs_loop_exact",
+    "logistic_early_exit_vs_fixed",
 )
 
 
@@ -45,6 +52,15 @@ def check(measured: dict, baseline: dict, floor: float) -> list[str]:
             )
         else:
             print(f"ok: {key}: {got:.2f}x (baseline {base:.2f}x, floor {floor * base:.2f}x)")
+    for key, hard in (baseline.get("absolute_floors") or {}).items():
+        got = measured.get("speedups", {}).get(key)
+        gated += 1
+        if got is None:
+            failures.append(f"{key}: missing from measured results (absolute floor {hard}x)")
+        elif got < hard:
+            failures.append(f"{key}: measured {got:.2f}x < absolute floor {hard:.2f}x")
+        else:
+            print(f"ok: {key}: {got:.2f}x (absolute floor {hard:.2f}x)")
     if gated == 0:
         # A baseline with no recognizable ratios must not pass vacuously — a
         # schema rename or truncated file would otherwise green the gate forever.

@@ -38,18 +38,6 @@ SEEDS_QUICK = 2
 SEEDS_FULL = 5
 
 
-def _final_at_budget(res) -> float:
-    """Median over trials of dist_sq at the last step within the comm budget."""
-    comm = np.asarray(res.comm)
-    d2 = np.asarray(res.dist_sq)
-    finals = []
-    for i in range(comm.shape[0]):
-        if comm[i, 0] > COMM_BUDGET:
-            continue
-        finals.append(d2[i, np.searchsorted(comm[i], COMM_BUDGET) - 1])
-    return float(np.median(finals)) if finals else float("nan")
-
-
 def _run_panel(prob, label: str, seeds: int = SEEDS_QUICK):
     mu = float(prob.strong_convexity())
     delta = float(prob.similarity())
@@ -92,7 +80,7 @@ def _run_panel(prob, label: str, seeds: int = SEEDS_QUICK):
             keep = comm <= COMM_BUDGET
             for c, d in zip(comm[keep], d2[keep]):
                 f.write(f"{name},{int(c)},{d:.6e}\n")
-    return {name: _final_at_budget(res) for name, res in runs.items()}
+    return {name: res.final_at_budget(COMM_BUDGET) for name, res in runs.items()}
 
 
 def run(quick: bool = False):

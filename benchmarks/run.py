@@ -48,6 +48,22 @@ def main() -> None:
         )
     sys.stdout.flush()
 
+    # ---- Figure 2 (Section 9: logistic regression through the engine) ------
+    from benchmarks import fig2
+
+    t0 = time.perf_counter()
+    results = fig2.run(quick=quick)
+    dt = (time.perf_counter() - t0) * 1e6
+    for panel, summary in results.items():
+        best_baseline = min(
+            (v for k, v in summary.items() if k != "svrp" and v == v), default=float("nan")
+        )
+        print(
+            f"fig2/{panel},{dt / max(len(results), 1):.0f},"
+            f"svrp={summary['svrp']:.2e};best_baseline={best_baseline:.2e}"
+        )
+    sys.stdout.flush()
+
     # ---- Table 1 (comm-to-eps grid) ---------------------------------------
     from benchmarks import table1_comm
 

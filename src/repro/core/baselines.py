@@ -169,8 +169,12 @@ def run_scaffold(
 def _surrogate_min(problem, s_idx, d_lin, y, theta):
     """argmin_x  f_s(x) + <d_lin, x> + theta/2 ||x - y||^2.
 
-    Closed form for quadratics; damped Newton otherwise (both exact to machine
-    precision, matching the 'solved locally, no communication' model).
+    Closed form for quadratics; otherwise this is exactly
+    prox_{(1/theta)(f_s + <d_lin, .>)}(y), solved by the registry's GUARDED
+    Newton (`core.prox.prox_newton`: backtracking + gradient-norm early exit
+    — raw undamped Newton overshoots on saturated logistic subproblems).
+    Both are exact to machine precision, matching the 'solved locally, no
+    communication' model.
     """
     if hasattr(problem, "A"):  # QuadraticProblem
         A_s = jnp.take(problem.A, s_idx, axis=0)
@@ -178,16 +182,13 @@ def _surrogate_min(problem, s_idx, d_lin, y, theta):
         H = A_s + theta * jnp.eye(problem.dim, dtype=y.dtype)
         return jnp.linalg.solve(H, b_s - d_lin + theta * y)
 
-    def phi_grad(x):
-        return problem.grad(s_idx, x) + d_lin + theta * (x - y)
+    from repro.core.prox import prox_newton
 
-    def phi_hess(x):
-        return problem.hessian(s_idx, x) + theta * jnp.eye(problem.dim, dtype=y.dtype)
-
-    def body(_, x):
-        return x - jnp.linalg.solve(phi_hess(x), phi_grad(x))
-
-    return jax.lax.fori_loop(0, 25, body, y)
+    return prox_newton(
+        lambda x: problem.grad(s_idx, x) + d_lin,
+        lambda x: problem.hessian(s_idx, x),
+        y, 1.0 / theta, max_steps=40, tol=1e-11,
+    )
 
 
 class DANEParams(NamedTuple):

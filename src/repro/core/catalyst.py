@@ -71,6 +71,7 @@ def catalyzed_svrp_scan(
     inner_steps: int,
     prox_solver: str = "exact",
     prox_steps: int = 50,
+    prox_tol: float = 1e-10,
 ) -> RunResult:
     """Catalyzed SVRP as a single nested scan (outer loop traced, not host-side).
 
@@ -85,7 +86,11 @@ def catalyzed_svrp_scan(
     inner_hp = SVRPParams(eta=hp.eta, p=hp.p, smoothness=hp.smoothness)
     # The shifted problems A_m + gamma I share the base eigenvectors, so the
     # spectral prox factors are computed ONCE here and shifted per stage —
-    # not re-factorized inside every outer scan iteration.
+    # not re-factorized inside every outer scan iteration.  Other registry
+    # solvers hoist nothing stage-independent; svrp_scan prepares them itself.
+    from repro.core.prox import get_prox_solver
+
+    get_prox_solver(prox_solver, problem)  # validate the pair at trace time
     base_factors = problem.prox_factors() if prox_solver == "spectral" else None
 
     def outer(carry, key_t):
@@ -96,7 +101,7 @@ def catalyzed_svrp_scan(
         res = svrp_scan(
             h_t, x_prev, x_star, key_t, inner_hp,
             num_steps=inner_steps, prox_solver=prox_solver, prox_steps=prox_steps,
-            prox_factors=pf,
+            prox_tol=prox_tol, prox_factors=pf,
         )
         x_t = res.x_final
 
@@ -119,7 +124,7 @@ def catalyzed_svrp_scan(
 
 _catalyzed_svrp_jit = jax.jit(
     catalyzed_svrp_scan,
-    static_argnames=("num_outer", "inner_steps", "prox_solver", "prox_steps"),
+    static_argnames=("num_outer", "inner_steps", "prox_solver", "prox_steps", "prox_tol"),
 )
 
 

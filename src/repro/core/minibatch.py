@@ -30,6 +30,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.prox import get_prox_solver
 from repro.core.types import RunResult
 
 
@@ -38,6 +39,7 @@ class MinibatchParams(NamedTuple):
 
     eta: jax.Array
     p: jax.Array
+    smoothness: jax.Array  # per-client L, used only by the "gd" local solver
 
 
 class _State(NamedTuple):
@@ -57,19 +59,21 @@ def svrp_minibatch_scan(
     num_steps: int,
     batch_clients: int,
     prox_solver: str = "exact",
+    prox_steps: int = 50,
+    prox_tol: float = 1e-10,
 ) -> RunResult:
     """SVRP with b = batch_clients sampled clients per round.
 
-    `prox_solver`: "exact" (problem.prox) or "spectral" (hoisted
-    eigendecomposition; quadratics only — see svrp_scan).
+    `prox_solver` is any registry name (exact/spectral/gd/newton/newton-cg —
+    see `repro.core.prox`); the per-client subproblems of a round share one
+    hoisted prepare() and are solved under vmap.
     """
     M = problem.num_clients
     b = batch_clients
     eta = jnp.asarray(hp.eta, x0.dtype)
     p = jnp.asarray(hp.p, x0.dtype)
-    if prox_solver not in ("exact", "spectral"):
-        raise ValueError(prox_solver)
-    factors = problem.prox_factors() if prox_solver == "spectral" else None
+    solver = get_prox_solver(prox_solver, problem)
+    factors = solver.prepare(problem)
     init = _State(x=x0, w=x0, gbar=problem.full_grad(x0), comm=jnp.asarray(3 * M))
 
     def step(s: _State, key_k):
@@ -79,9 +83,10 @@ def svrp_minibatch_scan(
         def one_client(m):
             g_k = s.gbar - problem.grad(m, s.w)
             z = s.x - eta * g_k
-            if prox_solver == "spectral":
-                return problem.prox_spectral(m, z, eta, factors)
-            return problem.prox(m, z, eta)
+            return solver.solve(
+                problem, factors, m, z, eta,
+                smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
+            )
 
         ys = jax.vmap(one_client)(ms)  # (b, d)
         x_next = jnp.mean(ys, axis=0)
@@ -100,7 +105,7 @@ def svrp_minibatch_scan(
     return RunResult(d2s, comms, fin.x)
 
 
-@partial(jax.jit, static_argnames=("num_steps", "batch_clients"))
+@partial(jax.jit, static_argnames=("num_steps", "batch_clients", "prox_solver", "prox_steps", "prox_tol"))
 def run_svrp_minibatch(
     problem,
     x0: jax.Array,
@@ -111,9 +116,20 @@ def run_svrp_minibatch(
     batch_clients: int,
     num_steps: int,
     key: jax.Array,
+    prox_solver: str = "exact",
+    prox_steps: int = 50,
+    prox_tol: float = 1e-10,
+    smoothness: float | None = None,
 ) -> RunResult:
-    hp = MinibatchParams(eta=jnp.asarray(eta), p=jnp.asarray(p))
+    if prox_solver == "gd" and smoothness is None:
+        raise ValueError("prox_solver='gd' requires smoothness=L (Algorithm 7 stepsize)")
+    hp = MinibatchParams(
+        eta=jnp.asarray(eta),
+        p=jnp.asarray(p),
+        smoothness=jnp.asarray(0.0 if smoothness is None else smoothness),
+    )
     return svrp_minibatch_scan(
         problem, x0, x_star, key, hp,
         num_steps=num_steps, batch_clients=batch_clients,
+        prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
     )

@@ -18,7 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.prox import prox_gd
+from repro.core.prox import get_prox_solver
 from repro.core.types import RunResult
 
 
@@ -37,25 +37,22 @@ def sppm_scan(
     hp: SPPMParams,
     *,
     num_steps: int,
-    prox_solver: str = "exact",  # "exact" (problem.prox) or "gd" (Algorithm 7)
+    prox_solver: str = "exact",  # registry name: exact/spectral/gd/newton/newton-cg
     prox_steps: int = 50,
+    prox_tol: float = 1e-10,
 ) -> RunResult:
     M = problem.num_clients
     eta = jnp.asarray(hp.eta, x0.dtype)
-    factors = problem.prox_factors() if prox_solver == "spectral" else None
+    solver = get_prox_solver(prox_solver, problem)
+    factors = solver.prepare(problem)
 
     def step(carry, key_k):
         x, comm = carry
         m = jax.random.randint(key_k, (), 0, M)
-        z = x
-        if prox_solver == "exact":
-            x_next = problem.prox(m, z, eta)
-        elif prox_solver == "spectral":
-            x_next = problem.prox_spectral(m, z, eta, factors)
-        elif prox_solver == "gd":
-            x_next = prox_gd(lambda y: problem.grad(m, y), z, eta, hp.smoothness, prox_steps)
-        else:
-            raise ValueError(prox_solver)
+        x_next = solver.solve(
+            problem, factors, m, x, eta,
+            smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
+        )
         comm = comm + 2  # server -> client (x_k), client -> server (x_{k+1})
         d2 = jnp.sum((x_next - x_star) ** 2)
         return (x_next, comm), (d2, comm)
@@ -65,7 +62,7 @@ def sppm_scan(
     return RunResult(dist_sq=d2s, comm=comms, x_final=x_fin)
 
 
-@partial(jax.jit, static_argnames=("num_steps", "prox_solver", "prox_steps"))
+@partial(jax.jit, static_argnames=("num_steps", "prox_solver", "prox_steps", "prox_tol"))
 def run_sppm(
     problem,
     x0: jax.Array,
@@ -76,6 +73,7 @@ def run_sppm(
     key: jax.Array,
     prox_solver: str = "exact",
     prox_steps: int = 50,
+    prox_tol: float = 1e-10,
     smoothness: float | None = None,
 ) -> RunResult:
     if prox_solver == "gd" and smoothness is None:
@@ -87,6 +85,7 @@ def run_sppm(
     return sppm_scan(
         problem, x0, x_star, key, hp,
         num_steps=num_steps, prox_solver=prox_solver, prox_steps=prox_steps,
+        prox_tol=prox_tol,
     )
 
 

@@ -29,7 +29,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.prox import prox_gd
+from repro.core.prox import get_prox_solver
 from repro.core.types import RunResult
 
 
@@ -58,26 +58,26 @@ def svrp_scan(
     num_steps: int,
     prox_solver: str = "exact",
     prox_steps: int = 50,
+    prox_tol: float = 1e-10,
     prox_factors=None,
 ) -> RunResult:
     """One SVRP trajectory as a pure lax.scan. Safe under jit AND vmap: no
-    Python branching on traced values; `prox_solver` is static config:
-
-    * "exact"    — problem.prox (LU solve per step for quadratics)
-    * "spectral" — problem.prox_spectral with factors hoisted out of the scan
-      (quadratics only; one O(M d^3) eigh, then matvecs — the fast path the
-      batched engine sweeps with, since a per-step LAPACK solve serializes
-      over the vmap axis on CPU).  Callers that already hold the (lam, Q)
-      factors (e.g. Catalyst, whose shifted problems share Q) pass them via
-      `prox_factors` to skip the recomputation.
-    * "gd"       — Algorithm 7, `prox_steps` gradient steps at hp.smoothness
+    Python branching on traced values; `prox_solver` is static config resolved
+    through the `repro.core.prox` registry ("exact" / "spectral" / "gd" /
+    "newton" / "newton-cg" — see that module for the solver contract).
+    Anything the solver hoists (e.g. the spectral per-client eigh, one
+    O(M d^3) factorization that keeps the in-scan prox to matvecs) is prepared
+    HERE, outside the scan; callers that already hold the hoisted state (e.g.
+    Catalyst, whose shifted problems share eigenvectors) pass it via
+    `prox_factors` to skip the recomputation.
     """
     M = problem.num_clients
     eta = jnp.asarray(hp.eta, x0.dtype)
     p = jnp.asarray(hp.p, x0.dtype)
+    solver = get_prox_solver(prox_solver, problem)
     factors = prox_factors
-    if factors is None and prox_solver == "spectral":
-        factors = problem.prox_factors()
+    if factors is None:
+        factors = solver.prepare(problem)
 
     # Initial anchor setup costs one full-gradient round: server broadcasts w_0
     # (M), clients return gradients (M), server broadcasts grad f(w_0) (M).
@@ -89,16 +89,10 @@ def svrp_scan(
 
         g_k = state.gbar - problem.grad(m, state.w)
         z = state.x - eta * g_k
-        if prox_solver == "exact":
-            x_next = problem.prox(m, z, eta)
-        elif prox_solver == "spectral":
-            x_next = problem.prox_spectral(m, z, eta, factors)
-        elif prox_solver == "gd":
-            x_next = prox_gd(
-                lambda y: problem.grad(m, y), z, eta, hp.smoothness, prox_steps
-            )
-        else:
-            raise ValueError(prox_solver)
+        x_next = solver.solve(
+            problem, factors, m, z, eta,
+            smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
+        )
 
         c = jax.random.bernoulli(key_c, p)
         w_next = jnp.where(c, x_next, state.w)
@@ -114,7 +108,7 @@ def svrp_scan(
     return RunResult(dist_sq=d2s, comm=comms, x_final=final.x)
 
 
-@partial(jax.jit, static_argnames=("num_steps", "prox_solver", "prox_steps"))
+@partial(jax.jit, static_argnames=("num_steps", "prox_solver", "prox_steps", "prox_tol"))
 def run_svrp(
     problem,
     x0: jax.Array,
@@ -126,6 +120,7 @@ def run_svrp(
     key: jax.Array,
     prox_solver: str = "exact",
     prox_steps: int = 50,
+    prox_tol: float = 1e-10,
     smoothness: float | None = None,
 ) -> RunResult:
     if prox_solver == "gd" and smoothness is None:
@@ -138,6 +133,7 @@ def run_svrp(
     return svrp_scan(
         problem, x0, x_star, key, hp,
         num_steps=num_steps, prox_solver=prox_solver, prox_steps=prox_steps,
+        prox_tol=prox_tol,
     )
 
 

@@ -68,7 +68,7 @@ from repro.core.catalyst import CatalyzedSVRPParams, catalyzed_svrp_scan
 from repro.core.composite import CompositeSVRPParams, composite_svrp_scan
 from repro.core.deep import DeepSVRPScanParams, deep_svrp_scan
 from repro.core.minibatch import MinibatchParams, svrp_minibatch_scan
-from repro.core.prox import prox_gd_batched
+from repro.core.prox import get_prox_solver, prox_gd_batched
 from repro.core.sppm import SPPMParams, sppm_scan
 from repro.core.svrp import SVRPParams, svrp_scan
 from repro.core.types import RunResult
@@ -96,7 +96,12 @@ class AlgoSpec:
     requires_x_star: bool = False  # problem.minimizer() is NOT the right reference point
 
 
-_PROX_STATIC = {"num_steps": _REQUIRED, "prox_solver": "exact", "prox_steps": 50}
+_PROX_STATIC = {
+    "num_steps": _REQUIRED,
+    "prox_solver": "exact",
+    "prox_steps": 50,
+    "prox_tol": 1e-10,
+}
 
 ALGOS: dict[str, AlgoSpec] = {
     "sppm": AlgoSpec(
@@ -111,8 +116,8 @@ ALGOS: dict[str, AlgoSpec] = {
     ),
     "svrp_minibatch": AlgoSpec(
         MinibatchParams, svrp_minibatch_scan,
-        defaults={"eta": _REQUIRED, "p": _REQUIRED},
-        static={"num_steps": _REQUIRED, "batch_clients": _REQUIRED, "prox_solver": "exact"},
+        defaults={"eta": _REQUIRED, "p": _REQUIRED, "smoothness": 0.0},
+        static={**_PROX_STATIC, "batch_clients": _REQUIRED},
     ),
     "catalyzed_svrp": AlgoSpec(
         CatalyzedSVRPParams, catalyzed_svrp_scan,
@@ -122,7 +127,7 @@ ALGOS: dict[str, AlgoSpec] = {
         },
         static={
             "num_outer": _REQUIRED, "inner_steps": _REQUIRED,
-            "prox_solver": "exact", "prox_steps": 50,
+            "prox_solver": "exact", "prox_steps": 50, "prox_tol": 1e-10,
         },
     ),
     "sgd": AlgoSpec(
@@ -201,6 +206,19 @@ class BatchResult(NamedTuple):
                 self.dist_sq, self.comm
             )
         )
+
+    def final_at_budget(self, budget: int) -> float:
+        """Median over trials of dist_sq at the LAST step with comm <= budget
+        (inclusive: a step landing exactly on the budget counts); NaN if no
+        trial has any step within budget."""
+        comm = np.asarray(self.comm)
+        d2 = np.asarray(self.dist_sq)
+        finals = [
+            d2[i, np.searchsorted(comm[i], budget, side="right") - 1]
+            for i in range(comm.shape[0])
+            if comm[i, 0] <= budget
+        ]
+        return float(np.median(finals)) if finals else float("nan")
 
     def summary(self, q: tuple[float, float] = (25.0, 75.0)) -> dict[str, np.ndarray]:
         """Median/IQR trajectories over the batch axis (the paper's shaded bands)."""
@@ -286,6 +304,14 @@ def _single_runner(scan_fn: Callable, static_items: tuple) -> Callable:
     return jax.jit(_one_trial_fn(scan_fn, static_items))
 
 
+def _problem_dtype(problem):
+    """The dtype the problem's own arrays carry (quadratic A / logistic Z)."""
+    for attr in ("A", "Z"):
+        if hasattr(problem, attr):
+            return getattr(problem, attr).dtype
+    return None
+
+
 def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star):
     """Shared entry-point preamble: trial table, static config, validation,
     and x0/x_star defaults — identical for run_batch and run_sequential so
@@ -297,6 +323,11 @@ def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star
             f"{algo} ignores the PRNG key; a multi-seed axis would run "
             "bit-identical duplicate trials. Pass seeds=1 (default)."
         )
+    if "prox_solver" in cfg:
+        # Trace-time (solver, problem) validation: a quadratic-only solver on
+        # a logistic problem must fail HERE with a clear message, not as an
+        # attribute/shape error deep inside the vmapped scan.
+        get_prox_solver(cfg["prox_solver"], problem)
     if cfg.get("prox_solver") == "gd":
         if "smoothness" not in spec.params_cls._fields:
             raise ValueError(f"{algo} does not support prox_solver='gd'")
@@ -306,7 +337,7 @@ def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star
                 "(Algorithm 7's stepsize is 1/(L + 1/eta); L=0 silently diverges)"
             )
     if x0 is None:
-        x0 = jnp.zeros(problem.dim, dtype=problem.A.dtype if hasattr(problem, "A") else None)
+        x0 = jnp.zeros(problem.dim, dtype=_problem_dtype(problem))
     if x_star is None:
         if spec.requires_x_star:
             raise ValueError(
@@ -404,6 +435,7 @@ def run_batch(
             raise ValueError(
                 f"{algo}: fused=True requires a fusable algo with prox_solver='gd'"
             )
+        _fused_oracle_kind(problem)  # clear trace-time error for unsupported problems
         interpret = True if interpret is None else interpret
         inner = cfg["prox_steps"] if "prox_steps" in cfg else cfg["local_steps"]
         body = _fused_body(algo, cfg["num_steps"], inner, interpret)
@@ -522,6 +554,45 @@ def _run_sharded(body, problem, x0, x_star, keys, hp, devices) -> RunResult:
 # sequential drivers), and the inner prox-GD loop goes through the batched
 # Pallas kernel so each GD step is one fused launch for the whole sweep —
 # per device, under shard="data".
+#
+# Two per-problem oracles: quadratic-family problems batch the generic
+# gradient through the ELEMENTWISE kernel (`kernels.prox_update_batched`, one
+# launch per GD step); logistic problems go one level deeper through
+# `kernels.logistic_prox_gd_batched`, which keeps the sampled client data
+# VMEM-resident and runs the entire Algorithm-7 loop in ONE launch.
+
+
+def _fused_oracle_kind(problem) -> str:
+    """Which fused Algorithm-7 oracle this problem supports ("quadratic" /
+    "logistic"), raising a clear trace-time error otherwise."""
+    if hasattr(problem, "A") and hasattr(problem, "b"):
+        return "quadratic"
+    if hasattr(problem, "Z") and hasattr(problem, "lam"):
+        return "logistic"
+    raise ValueError(
+        f"fused=True has no batched Pallas prox path for {type(problem).__name__}: "
+        "supported oracles are the quadratic family (A/b attrs; generic gradient "
+        "through kernels.prox_update_batched) and the logistic family (Z/y/lam "
+        "attrs; kernels.logistic_prox_gd_batched) — run with fused=False instead"
+    )
+
+
+def _prox_gd_fused(problem, m, z, eta, L, prox_steps, interpret):
+    """The batched Algorithm-7 solve of one fused engine step: per-trial
+    sampled client `m` (B,), targets `z` (B, d), per-trial eta/L scalars."""
+    if _fused_oracle_kind(problem) == "logistic":
+        from repro.kernels.logistic_prox import logistic_prox_gd_batched
+
+        A = jnp.take(problem.Z, m, axis=0) * jnp.take(problem.y, m, axis=0)[:, :, None]
+        beta = 1.0 / (L + 1.0 / eta)
+        return logistic_prox_gd_batched(
+            A, z, beta, 1.0 / eta, problem.lam, prox_steps, interpret=interpret
+        )
+    grad_b = jax.vmap(problem.grad)
+    return prox_gd_batched(
+        lambda y: grad_b(m, y), z, eta, L, prox_steps,
+        use_kernel=True, interpret=interpret,
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -592,10 +663,7 @@ def _sppm_step_fused(problem, state, keys_k, eta, L, x_star, prox_steps, interpr
     x, comm = state
     M = problem.num_clients
     m = jax.vmap(lambda k: jax.random.randint(k, (), 0, M))(keys_k)
-    grad_b = jax.vmap(problem.grad)
-    x_next = prox_gd_batched(
-        lambda y: grad_b(m, y), x, eta, L, prox_steps, use_kernel=True, interpret=interpret
-    )
+    x_next = _prox_gd_fused(problem, m, x, eta, L, prox_steps, interpret)
     comm = comm + 2
     d2 = jnp.sum((x_next - x_star[None]) ** 2, axis=-1)
     return (x_next, comm), (d2, comm)
@@ -612,9 +680,7 @@ def _svrp_step_fused(problem, state, keys_k, eta, L, x_star, prox_steps, interpr
 
     g_k = gbar - grad_b(m, w)
     z = x - eta[:, None] * g_k
-    x_next = prox_gd_batched(
-        lambda y: grad_b(m, y), z, eta, L, prox_steps, use_kernel=True, interpret=interpret
-    )
+    x_next = _prox_gd_fused(problem, m, z, eta, L, prox_steps, interpret)
 
     c = jax.vmap(jax.random.bernoulli)(key_c, p)
     w_next = jnp.where(c[:, None], x_next, w)

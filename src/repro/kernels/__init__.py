@@ -7,8 +7,13 @@ validated with interpret=True on CPU), `ref.py` naive oracles.
 
 Kernels: flash_attention (train/prefill), decode_attention (flash-decode),
 rwkv6_scan, ssm_scan (Mamba-2 SSD form), prox_update (the paper's
-Algorithm-7 fused local step).
+Algorithm-7 fused local step), logistic_prox (the whole Algorithm-7 loop on
+the (B, n, d) logistic oracle, client data VMEM-resident across GD steps).
 """
+# NOTE: the `prox_update` kernel FUNCTIONS are deliberately not re-exported
+# here — they would shadow the `repro.kernels.prox_update` module name that
+# ops.py and the engine import lazily.
 from repro.kernels import ops, ref
+from repro.kernels.logistic_prox import logistic_prox_gd_batched
 
-__all__ = ["ops", "ref"]
+__all__ = ["logistic_prox_gd_batched", "ops", "ref"]

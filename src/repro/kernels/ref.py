@@ -130,6 +130,28 @@ def prox_update(y, g, z, local_lr, inv_eta):
     return y - local_lr * (g + (y - z) * inv_eta)
 
 
+def logistic_prox_gd_batched(A, z, beta, inv_eta, lam, num_steps):
+    """Algorithm 7 on the (B, n, d) logistic oracle.  Oracle.
+
+    A = y[:, None] * Z (label-signed client rows per trial); per GD step
+
+        t = A x;  g = -A' sigmoid(-t)/n + lam x;  x <- x - beta (g + (x-z)/eta)
+
+    started from x0 = z, matching `core.prox.prox_gd`'s default.
+    """
+    B, n, _ = A.shape
+    beta = jnp.broadcast_to(jnp.asarray(beta, z.dtype), (B,))
+    inv_eta = jnp.broadcast_to(jnp.asarray(inv_eta, z.dtype), (B,))
+
+    def body(_, x):
+        t = jnp.einsum("bnd,bd->bn", A, x)
+        u = 0.5 * (jnp.tanh(-0.5 * t) + 1.0)  # sigmoid(-t)
+        g = -jnp.einsum("bn,bnd->bd", u, A) / n + lam * x
+        return x - beta[:, None] * (g + (x - z) * inv_eta[:, None])
+
+    return jax.lax.fori_loop(0, num_steps, body, z)
+
+
 def prox_update_batched(y, g, z, local_lr, inv_eta):
     """Per-trial prox-GD step over a sweep batch.  Oracle.
 

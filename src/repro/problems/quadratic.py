@@ -65,6 +65,19 @@ class QuadraticProblem:
     def full_loss(self, x: jax.Array) -> jax.Array:
         return 0.5 * x @ (self.A_bar @ x) - self.b_bar @ x
 
+    def hessian(self, m: jax.Array, x: jax.Array) -> jax.Array:
+        """Constant client Hessian A_m (uniform oracle for the Newton solvers,
+        which then converge in a single guarded step on quadratics)."""
+        del x
+        return jnp.take(self.A, m, axis=0)
+
+    def local_oracle(self, m: jax.Array):
+        """(grad_fn, hess_fn) of client m with the (A_m, b_m) gather hoisted
+        out of iterative prox solvers (see LogisticProblem.local_oracle)."""
+        A_m = jnp.take(self.A, m, axis=0)
+        b_m = jnp.take(self.b, m, axis=0)
+        return (lambda x: A_m @ x - b_m), (lambda x: A_m)
+
     def prox(self, m: jax.Array, z: jax.Array, eta: jax.Array) -> jax.Array:
         """Exact prox_{eta f_m}(z) = (I + eta A_m)^{-1}(z + eta b_m)."""
         A_m = jnp.take(self.A, m, axis=0)

@@ -121,7 +121,10 @@ def test_run_batch_compiles_once(prob, theory):
 
     jitted = runner_mod._batched_runner(
         svrp_scan,
-        tuple(sorted({"num_steps": 50, "prox_solver": "exact", "prox_steps": 50}.items())),
+        tuple(sorted({
+            "num_steps": 50, "prox_solver": "exact", "prox_steps": 50,
+            "prox_tol": 1e-10,
+        }.items())),
     )
     cache_size = getattr(jitted, "_cache_size", lambda: None)()
     if cache_size is not None:  # jax exposes the tracing-cache size
@@ -363,6 +366,150 @@ def test_fused_sppm_matches_sequential(prob, theory):
         np.testing.assert_allclose(
             np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-20
         )
+
+
+# -------------------------------------------------- logistic (non-quadratic) track
+@pytest.fixture(scope="module")
+def lprob():
+    from repro.problems import make_a9a_like_problem
+
+    return make_a9a_like_problem(
+        num_clients=6, n_per_client=60, n_pool=400, dim=30, nnz_per_row=6, seed=0
+    )
+
+
+@pytest.fixture(scope="module")
+def ltheory(lprob):
+    mu = float(lprob.strong_convexity())
+    x_star = lprob.minimizer()
+    delta = float(lprob.similarity_at(x_star))
+    return {
+        "eta": mu / (2 * delta**2),
+        "L": float(lprob.smoothness_max()),
+        "x_star": x_star,
+        "x0": jnp.zeros(lprob.dim),
+    }
+
+
+def test_run_batch_matches_sequential_svrp_logistic(lprob, ltheory):
+    """The acceptance line: a multi-seed x stepsize a9a-like sweep with the
+    guarded-Newton prox runs as ONE jit and reproduces every per-trial
+    `run_svrp` trajectory to <= 1e-5."""
+    eta = ltheory["eta"]
+    grid = {"eta": [eta, eta / 2], "p": 1 / 6}
+    res = run_batch("svrp", lprob, grid=grid, seeds=2, num_steps=60, prox_solver="newton")
+    assert res.num_trials == 4
+    for i, lab in enumerate(res.labels()):
+        r = run_svrp(
+            lprob, ltheory["x0"], ltheory["x_star"], eta=lab["eta"], p=lab["p"],
+            num_steps=60, key=jax.random.key(lab["seed"]), prox_solver="newton",
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+        )
+        np.testing.assert_array_equal(np.asarray(res.comm[i]), np.asarray(r.comm))
+    # and it actually optimizes at the theory stepsize
+    assert float(jnp.median(res.dist_sq[:, -1])) < 1e-3 * float(res.dist_sq[0, 0])
+
+
+def test_run_batch_matches_sequential_sppm_logistic_newton_cg(lprob, ltheory):
+    res = run_batch(
+        "sppm", lprob, grid={"eta": [2.0, 0.5]}, seeds=2, num_steps=80,
+        prox_solver="newton-cg",
+    )
+    seq = run_sequential(
+        "sppm", lprob, grid={"eta": [2.0, 0.5]}, seeds=2, num_steps=80,
+        prox_solver="newton-cg",
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.dist_sq), np.asarray(seq.dist_sq), rtol=1e-6, atol=1e-24
+    )
+    for i, lab in enumerate(res.labels()):
+        r = run_sppm(
+            lprob, ltheory["x0"], ltheory["x_star"], eta=lab["eta"], num_steps=80,
+            key=jax.random.key(lab["seed"]), prox_solver="newton-cg",
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dist_sq[i]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+        )
+
+
+def test_run_batch_logistic_quadratic_only_solver_raises(lprob):
+    """spectral on a LogisticProblem must fail at trace time with a clear
+    quadratic-only message, not an opaque attribute/shape error."""
+    with pytest.raises(ValueError, match="quadratic-only"):
+        run_batch("svrp", lprob, grid={"eta": 0.1, "p": 0.1}, num_steps=5,
+                  prox_solver="spectral")
+    with pytest.raises(ValueError, match="unknown prox_solver"):
+        run_batch("svrp", lprob, grid={"eta": 0.1, "p": 0.1}, num_steps=5,
+                  prox_solver="cholesky")
+
+
+def test_run_batch_fused_requires_supported_oracle(ltheory):
+    """fused=True on a problem with neither the quadratic nor the logistic
+    Pallas path must raise the clear unsupported-oracle error."""
+
+    class OddProblem:
+        num_clients = 3
+        dim = 4
+
+        def grad(self, m, x):
+            return x
+
+        def full_grad(self, x):
+            return x
+
+    with pytest.raises(ValueError, match="no batched Pallas prox path"):
+        run_batch(
+            "sppm", OddProblem(), grid={"eta": 0.1, "smoothness": 1.0}, num_steps=5,
+            prox_solver="gd", fused=True,
+            x0=jnp.zeros(4), x_star=jnp.zeros(4),
+        )
+
+
+def test_fused_logistic_matches_gd_path(lprob, ltheory):
+    """fused=True on logistic routes Algorithm 7 through the in-kernel
+    logistic oracle (kernels.logistic_prox_gd_batched); numerics must track
+    the generic 'gd' solver path."""
+    eta, L = ltheory["eta"], ltheory["L"]
+    grid = {"eta": [eta, eta / 2], "p": 1 / 6, "smoothness": L}
+    kw = dict(seeds=2, num_steps=40, prox_solver="gd", prox_steps=25)
+    r_f = run_batch("svrp", lprob, grid=grid, fused=True, **kw)
+    r_g = run_batch("svrp", lprob, grid=grid, **kw)
+    np.testing.assert_allclose(
+        np.asarray(r_f.dist_sq), np.asarray(r_g.dist_sq), rtol=1e-5, atol=1e-24
+    )
+    np.testing.assert_array_equal(np.asarray(r_f.comm), np.asarray(r_g.comm))
+
+
+def test_run_batch_logistic_shard_data(lprob, ltheory):
+    """shard='data' composes with the logistic track (degenerate single-device
+    mesh here; the CI sharded-8dev entry runs it over 8 simulated devices)."""
+    grid = {"eta": [ltheory["eta"], ltheory["eta"] / 2], "p": 1 / 6}
+    sh = run_batch("svrp", lprob, grid=grid, seeds=2, num_steps=40,
+                   prox_solver="newton", shard="data")
+    sq = run_sequential("svrp", lprob, grid=grid, seeds=2, num_steps=40,
+                        prox_solver="newton")
+    np.testing.assert_allclose(
+        np.asarray(sh.dist_sq), np.asarray(sq.dist_sq), rtol=1e-5, atol=1e-24
+    )
+    np.testing.assert_array_equal(np.asarray(sh.comm), np.asarray(sq.comm))
+
+
+def test_run_batch_minibatch_newton_logistic(lprob, ltheory):
+    """The minibatch driver dispatches through the registry too (it used to
+    hard-reject everything but exact/spectral)."""
+    res = run_batch(
+        "svrp_minibatch", lprob, grid={"eta": ltheory["eta"], "p": 2 / 6},
+        seeds=2, num_steps=50, batch_clients=2, prox_solver="newton",
+    )
+    r = run_svrp_minibatch(
+        lprob, ltheory["x0"], ltheory["x_star"], eta=ltheory["eta"], p=2 / 6,
+        batch_clients=2, num_steps=50, key=jax.random.key(0), prox_solver="newton",
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.dist_sq[0]), np.asarray(r.dist_sq), rtol=1e-5, atol=1e-24
+    )
 
 
 # --------------------------------------------------------------- sharded mode
