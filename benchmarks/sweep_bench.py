@@ -36,6 +36,27 @@ Acceptance floor: >= 5x on CPU (absolute, encoded in the baseline's
 `absolute_floors`); measured ~17x idle alongside a ~6x win from the
 early-exit bugfix alone.
 
+SVRP-on-logistic caveat track (the refresh-bearing algorithm the old vmapped
+engine ran at ~0.5x of its own loop, because the per-trial anchor-refresh
+`lax.cond` linearized under vmap into a select paying `full_grad` for every
+trial every step):
+
+* logistic_svrp_loop/gd + logistic_svrp_batch/gd            — Algorithm-7 prox
+* logistic_svrp_loop/newton-cg + logistic_svrp_batch/newton-cg
+
+The batched side now runs the round-substrate layer's batch-aware execution
+(`core.rounds.registry_batched_scan`: one batch-level `lax.cond(jnp.any(c))`
+per step, full-gradient recompute only when some trial refreshes).
+Acceptance: `logistic_svrp_batch_gd_vs_loop` >= 1x ABSOLUTE (the recorded
+0.5x caveat must stay recovered); measured ~1.3x (gd) / ~1.1x (newton-cg)
+idle.
+
+Fused-substrate timing (quadratic minibatch SVRP, all B x b cohort proxes of
+a step in one batched Pallas launch per GD step, interpret mode on CPU):
+`minibatch_loop/gd` vs `minibatch_fused/gd`, recorded as
+`minibatch_fused_vs_loop` — informational on CPU (interpret-mode kernel
+emulation dominates; the compiled-kernel win is a real-TPU item).
+
 CLI (the CI bench job's entry point):
 
     python -m benchmarks.sweep_bench --json BENCH_sweep.json [--full]
@@ -113,6 +134,17 @@ def _logistic_variants(quick: bool):
     x_star = lp.minimizer()
     grid = {"eta": [2.0, 1.0, 4.0, 0.5]}
     common = dict(seeds=n_seeds, num_steps=num_steps, x_star=x_star)
+
+    # SVRP caveat track: the refresh-bearing algorithm at its theory
+    # hyperparameters (eta = mu/(2 delta^2), p = 1/M).
+    mu = float(lp.strong_convexity())
+    delta = float(lp.similarity_at(x_star))
+    L = float(lp.smoothness_max())
+    eta_svrp = theorem2_stepsize(mu, delta)
+    sgrid = {"eta": [eta_svrp, eta_svrp / 2, 2 * eta_svrp, eta_svrp / 4], "p": 1 / M}
+    sgrid_gd = {**sgrid, "smoothness": L}
+    gd_kw = dict(prox_solver="gd", prox_steps=25)
+
     return {
         "logistic_loop/fixed25": lambda: run_sequential(
             "sppm", lp, grid=grid, prox_solver="newton-fixed25", **common
@@ -125,6 +157,18 @@ def _logistic_variants(quick: bool):
         ).dist_sq,
         "logistic_batch/newton-cg": lambda: run_batch(
             "sppm", lp, grid=grid, prox_solver="newton-cg", **common
+        ).dist_sq,
+        "logistic_svrp_loop/gd": lambda: run_sequential(
+            "svrp", lp, grid=sgrid_gd, **gd_kw, **common
+        ).dist_sq,
+        "logistic_svrp_batch/gd": lambda: run_batch(
+            "svrp", lp, grid=sgrid_gd, **gd_kw, **common
+        ).dist_sq,
+        "logistic_svrp_loop/newton-cg": lambda: run_sequential(
+            "svrp", lp, grid=sgrid, prox_solver="newton-cg", **common
+        ).dist_sq,
+        "logistic_svrp_batch/newton-cg": lambda: run_batch(
+            "svrp", lp, grid=sgrid, prox_solver="newton-cg", **common
         ).dist_sq,
     }
 
@@ -158,6 +202,21 @@ def run_structured(quick: bool = False) -> dict:
             prox_solver="spectral",
         ).dist_sq,
     }
+    # Fused-substrate timing: minibatch SVRP, every cohort prox of every
+    # trial through one batched Pallas launch per GD step (interpret on CPU).
+    L = float(prob.smoothness_max())
+    mb_grid = {"eta": [4 * eta, 2 * eta], "p": 4 / M, "smoothness": L}
+    mb_kw = dict(
+        seeds=n_seeds, num_steps=num_steps, batch_clients=4,
+        prox_solver="gd", prox_steps=20,
+    )
+    variants["minibatch_loop/gd"] = lambda: run_sequential(
+        "svrp_minibatch", prob, grid=mb_grid, **mb_kw
+    ).dist_sq
+    variants["minibatch_fused/gd"] = lambda: run_batch(
+        "svrp_minibatch", prob, grid=mb_grid, fused=True, **mb_kw
+    ).dist_sq
+
     n_dev = len(jax.devices())
     if n_dev > 1:
         variants["shard/spectral"] = lambda: run_batch(
@@ -189,6 +248,20 @@ def run_structured(quick: bool = False) -> dict:
         ),
         "logistic_early_exit_vs_fixed": (
             warm_us["logistic_loop/fixed25"] / warm_us["logistic_loop/exact"]
+        ),
+        # SVRP-on-logistic caveat track: batch-aware anchor refresh must keep
+        # the batched engine AT LEAST as fast as its own per-trial loop
+        # (>= 1x absolute in the baseline; the old vmapped path sat at ~0.5x).
+        "logistic_svrp_batch_gd_vs_loop": (
+            warm_us["logistic_svrp_loop/gd"] / warm_us["logistic_svrp_batch/gd"]
+        ),
+        "logistic_svrp_batch_newton_cg_vs_loop": (
+            warm_us["logistic_svrp_loop/newton-cg"]
+            / warm_us["logistic_svrp_batch/newton-cg"]
+        ),
+        # Fused minibatch: informational on CPU (interpret-mode Pallas).
+        "minibatch_fused_vs_loop": (
+            warm_us["minibatch_loop/gd"] / warm_us["minibatch_fused/gd"]
         ),
     }
     if "shard/spectral" in warm_us:
@@ -232,6 +305,12 @@ def _rows_from(data: dict) -> list:
         f"batch_newton_cg_vs_loop_fixed={sp['logistic_batch_newton_cg_vs_loop_fixed']:.1f}x;"
         f"vs_loop_exact={sp['logistic_batch_newton_cg_vs_loop_exact']:.1f}x;"
         f"early_exit_vs_fixed={sp['logistic_early_exit_vs_fixed']:.1f}x",
+    ))
+    rows.append((
+        f"logistic_svrp_caveat_B{B}", data["timings_us"]["logistic_svrp_batch/gd"],
+        f"batch_gd_vs_loop={sp['logistic_svrp_batch_gd_vs_loop']:.2f}x;"
+        f"batch_newton_cg_vs_loop={sp['logistic_svrp_batch_newton_cg_vs_loop']:.2f}x;"
+        f"minibatch_fused_vs_loop={sp['minibatch_fused_vs_loop']:.2f}x",
     ))
     return rows
 

@@ -19,6 +19,13 @@ Two implementations:
   RunResult`, jit- and vmap-safe, so the batched experiment engine can sweep
   (mu, gamma, eta, p) x seeds in a single compilation.  `run_catalyzed_svrp`
   delegates to it with the proof's parameter choices.
+
+The inner rounds are the SHARED SVRP round definition (via `svrp_scan`, see
+`repro.core.rounds`) — this module only owns the Catalyst outer recurrence.
+On the fused substrate (`run_batch("catalyzed_svrp", ..., fused=True)`) the
+engine runs `rounds._catalyzed_batched_scan`: the same outer recurrence
+hand-batched over trials, inner SVRP rounds on per-trial shifted oracles
+through the batched Pallas Algorithm-7 kernel.
 """
 from __future__ import annotations
 

@@ -30,6 +30,7 @@ from typing import Any, Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.rounds import ROUND_DEFS, RoundOps, local_prox_gd_tree, scan_rounds
 from repro.core.types import RunResult
 from repro.kernels.ref import prox_update as _prox_update_ref
 from repro.utils.tree import (
@@ -108,14 +109,13 @@ def deep_svrp_round(
     # (2) prox target z = x - eta g_k.
     z = tree_axpy(-cfg.eta, g_k, state.params)
 
-    # (3) K local prox-GD steps on  f_m(y) + ||y - z||^2/(2 eta)  (Algorithm 7).
-    def local_step(y, _):
-        g = grad_fn(y, batch)
-        prox_pull = tree_scale(tree_sub(y, z), 1.0 / cfg.eta)
-        update = tree_add(g, prox_pull)
-        return tree_axpy(-cfg.local_lr, update, y), None
-
-    y, _ = jax.lax.scan(local_step, state.params, None, length=cfg.local_steps)
+    # (3) K local prox-GD steps on  f_m(y) + ||y - z||^2/(2 eta)  (Algorithm 7)
+    #     — the same shared local solver the pod step (launch/steps.py) and
+    #     the convex scan driver consume (`rounds.local_prox_gd_tree`).
+    y, _ = local_prox_gd_tree(
+        lambda p: grad_fn(p, batch), z, state.params,
+        cfg.local_lr, 1.0 / cfg.eta, cfg.local_steps,
+    )
 
     # (4) server aggregation — the per-round 2-step communication.
     x_next = _maybe_pmean(y, axis_names)
@@ -151,13 +151,6 @@ class DeepSVRPScanParams(NamedTuple):
     anchor_prob: jax.Array  # p — Bernoulli anchor-refresh probability
 
 
-class _DeepScanState(NamedTuple):
-    x: jax.Array
-    w: jax.Array
-    gbar: jax.Array
-    comm: jax.Array
-
-
 def deep_svrp_scan(
     problem,
     x0: jax.Array,
@@ -186,7 +179,10 @@ def deep_svrp_scan(
     Communication accounting (full participation): 2M per round (x down / y up
     for all M cohorts) + a Bernoulli-gated 2M for the anchor-gradient
     all-reduce, after the 3M init round.  Used by tests as the per-trial
-    oracle and by the engine (standard + fused + sharded paths).
+    oracle and by the engine (standard + fused + sharded paths).  The round
+    body is the shared `rounds.ROUND_DEFS["deep_svrp"]` definition; only the
+    local solver binding (Algorithm 7 at the explicit `local_lr` stepsize over
+    the (M, d) cohort rows) lives here.
     """
     M = problem.num_clients
     d = x0.shape[-1]
@@ -195,34 +191,22 @@ def deep_svrp_scan(
     # reciprocal-multiply, bit-identical to the fused Pallas kernel.
     inv_eta = 1.0 / eta
     beta = jnp.asarray(hp.local_lr, x0.dtype)
-    p = jnp.asarray(hp.anchor_prob, x0.dtype)
     clients = jnp.arange(M)
-    grad_all = jax.vmap(problem.grad, in_axes=(0, None))  # w -> (M, d)
     grad_rows = jax.vmap(problem.grad)  # (M,), (M, d) -> (M, d)
-    init = _DeepScanState(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
 
-    def step(s: _DeepScanState, key_k):
-        g_k = s.gbar[None, :] - grad_all(clients, s.w)  # (M, d)
-        z = s.x[None, :] - eta * g_k
-
+    def local_prox_gd(z, x):  # (M, d) targets, shared start x -> (M, d)
         def local(y, _):
             return _prox_update_ref(y, grad_rows(clients, y), z, beta, inv_eta), None
 
-        y, _ = jax.lax.scan(local, jnp.broadcast_to(s.x, (M, d)), None, length=local_steps)
-        x_next = jnp.mean(y, axis=0)
-
-        c = jax.random.bernoulli(key_k, p)
-        w_next = jnp.where(c, x_next, s.w)
-        gbar_next = jax.lax.cond(c, lambda: problem.full_grad(w_next), lambda: s.gbar)
-        comm = s.comm + 2 * M + 2 * M * c.astype(jnp.int32)
-        return _DeepScanState(x_next, w_next, gbar_next, comm), (
-            jnp.sum((x_next - x_star) ** 2),
-            comm,
+        y, _ = jax.lax.scan(
+            local, jnp.broadcast_to(x, (M, d)), None, length=local_steps
         )
+        return y
 
-    keys = jax.random.split(key, num_steps)
-    fin, (d2s, comms) = jax.lax.scan(step, init, keys)
-    return RunResult(d2s, comms, fin.x)
+    ops = RoundOps(
+        problem, hp, x_star, x0.dtype, batched=False, local_prox_gd=local_prox_gd
+    )
+    return scan_rounds(ROUND_DEFS["deep_svrp"], ops, x0, key, num_steps)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "local_steps"))

@@ -20,7 +20,11 @@ argument for the DeepSVRP cohort design (DESIGN.md §4).
 
 `svrp_minibatch_scan` is the vmap-safe step-scan (eta/p traced, cohort size
 static) used by the batched experiment engine; `run_svrp_minibatch` is the
-jitted float-argument wrapper.
+jitted float-argument wrapper.  The round body is the shared
+`rounds.ROUND_DEFS["svrp_minibatch"]` definition bound to the sequential
+substrate — the engine runs the same definition vmapped and fused
+(`run_batch("svrp_minibatch", ..., fused=True)` routes every cohort prox of
+every trial through one batched Pallas launch).
 """
 from __future__ import annotations
 
@@ -31,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.prox import get_prox_solver
+from repro.core.rounds import ROUND_DEFS, RoundOps, scan_rounds
 from repro.core.types import RunResult
 
 
@@ -40,13 +45,6 @@ class MinibatchParams(NamedTuple):
     eta: jax.Array
     p: jax.Array
     smoothness: jax.Array  # per-client L, used only by the "gd" local solver
-
-
-class _State(NamedTuple):
-    x: jax.Array
-    w: jax.Array
-    gbar: jax.Array
-    comm: jax.Array
 
 
 def svrp_minibatch_scan(
@@ -68,41 +66,23 @@ def svrp_minibatch_scan(
     see `repro.core.prox`); the per-client subproblems of a round share one
     hoisted prepare() and are solved under vmap.
     """
-    M = problem.num_clients
-    b = batch_clients
     eta = jnp.asarray(hp.eta, x0.dtype)
-    p = jnp.asarray(hp.p, x0.dtype)
     solver = get_prox_solver(prox_solver, problem)
     factors = solver.prepare(problem)
-    init = _State(x=x0, w=x0, gbar=problem.full_grad(x0), comm=jnp.asarray(3 * M))
 
-    def step(s: _State, key_k):
-        key_m, key_c = jax.random.split(key_k)
-        ms = jax.random.choice(key_m, M, shape=(b,), replace=False)
-
-        def one_client(m):
-            g_k = s.gbar - problem.grad(m, s.w)
-            z = s.x - eta * g_k
-            return solver.solve(
-                problem, factors, m, z, eta,
+    def cohort_prox(ms, z):  # (b,), (b, d) -> (b, d)
+        return jax.vmap(
+            lambda m, z_m: solver.solve(
+                problem, factors, m, z_m, eta,
                 smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
             )
+        )(ms, z)
 
-        ys = jax.vmap(one_client)(ms)  # (b, d)
-        x_next = jnp.mean(ys, axis=0)
-
-        c = jax.random.bernoulli(key_c, p)
-        w_next = jnp.where(c, x_next, s.w)
-        gbar_next = jax.lax.cond(c, lambda: problem.full_grad(w_next), lambda: s.gbar)
-        comm = s.comm + 2 * b + 3 * M * c.astype(jnp.int32)
-        return _State(x_next, w_next, gbar_next, comm), (
-            jnp.sum((x_next - x_star) ** 2),
-            comm,
-        )
-
-    keys = jax.random.split(key, num_steps)
-    fin, (d2s, comms) = jax.lax.scan(step, init, keys)
-    return RunResult(d2s, comms, fin.x)
+    ops = RoundOps(
+        problem, hp, x_star, x0.dtype, batched=False,
+        cohort_prox=cohort_prox, cohort_size=batch_clients,
+    )
+    return scan_rounds(ROUND_DEFS["svrp_minibatch"], ops, x0, key, num_steps)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "batch_clients", "prox_solver", "prox_steps", "prox_tol"))

@@ -43,6 +43,17 @@ The iterative solvers exit early through `lax.while_loop` once the subproblem
 gradient norm drops below `tol`; under vmap the loop runs until every lane
 converges while finished lanes' carries are masked, so batched trajectories
 stay bitwise-identical to the sequential ones.
+
+Layering: this registry is the LOCAL-SOLVE half of the round-substrate layer
+(`repro.core.rounds`).  Each algorithm's round body is defined once there;
+the sequential `*_scan` wrappers bind `solver.solve` per sampled client, the
+engine's batched substrate (`rounds.registry_batched_scan`) vmaps the same
+`solve` per trial inside a batch-level round (which is what makes the anchor
+refresh batch-aware), and the fused substrate replaces it with the batched
+Pallas Algorithm-7 kernels.  For batched non-quadratic sweeps prefer
+"newton-cg": a vmapped `newton` serializes on its per-lane LAPACK solve,
+while hvp-CG is pure matvecs (see the measured caveat-track ratios in
+ROADMAP.md).
 """
 from __future__ import annotations
 

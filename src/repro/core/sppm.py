@@ -8,7 +8,9 @@ Each iteration costs 2 communication steps (send x_k, receive x_{k+1}).
 
 `sppm_scan` is the pure vmap-safe step-scan (traced hyperparameters in
 `SPPMParams`, static prox-solver dispatch) consumed by the batched experiment
-engine; `run_sppm` is the jitted float-argument wrapper.
+engine; `run_sppm` is the jitted float-argument wrapper.  The round body is
+the shared `rounds.ROUND_DEFS["sppm"]` definition bound to the sequential
+substrate — the engine runs the same definition vmapped and fused.
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.prox import get_prox_solver
+from repro.core.rounds import ROUND_DEFS, RoundOps, scan_rounds
 from repro.core.types import RunResult
 
 
@@ -41,25 +44,18 @@ def sppm_scan(
     prox_steps: int = 50,
     prox_tol: float = 1e-10,
 ) -> RunResult:
-    M = problem.num_clients
     eta = jnp.asarray(hp.eta, x0.dtype)
     solver = get_prox_solver(prox_solver, problem)
     factors = solver.prepare(problem)
 
-    def step(carry, key_k):
-        x, comm = carry
-        m = jax.random.randint(key_k, (), 0, M)
-        x_next = solver.solve(
-            problem, factors, m, x, eta,
+    ops = RoundOps(
+        problem, hp, x_star, x0.dtype, batched=False,
+        prox=lambda m, z: solver.solve(
+            problem, factors, m, z, eta,
             smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
-        )
-        comm = comm + 2  # server -> client (x_k), client -> server (x_{k+1})
-        d2 = jnp.sum((x_next - x_star) ** 2)
-        return (x_next, comm), (d2, comm)
-
-    keys = jax.random.split(key, num_steps)
-    (x_fin, _), (d2s, comms) = jax.lax.scan(step, (x0, jnp.asarray(0)), keys)
-    return RunResult(dist_sq=d2s, comm=comms, x_final=x_fin)
+        ),
+    )
+    return scan_rounds(ROUND_DEFS["sppm"], ops, x0, key, num_steps)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "prox_solver", "prox_steps", "prox_tol"))

@@ -20,6 +20,12 @@ RunResult` step-scan — vmap-safe (all hyperparameters are traced scalars in
 `SVRPParams`; the prox-solver dispatch is static) — used by the batched
 experiment engine (`repro.experiments`).  `run_svrp` is the jitted
 float-argument wrapper the paper-faithful tests and benchmarks call.
+
+The round body itself (sampling, variance-reduced prox target, anchor
+refresh, Section-4.2 accounting) lives ONCE in `repro.core.rounds` — this
+module binds it to the sequential substrate (per-trial scan + registry prox
+solver); the experiment engine executes the same definition vmapped and
+fused (hand-batched Pallas).
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.prox import get_prox_solver
+from repro.core.rounds import ROUND_DEFS, RoundOps, scan_rounds
 from repro.core.types import RunResult
 
 
@@ -39,13 +46,6 @@ class SVRPParams(NamedTuple):
     eta: jax.Array  # prox stepsize
     p: jax.Array  # anchor-refresh probability
     smoothness: jax.Array  # per-client L, used only by the "gd" local solver
-
-
-class SVRPState(NamedTuple):
-    x: jax.Array
-    w: jax.Array
-    gbar: jax.Array  # grad f(w), cached full gradient at the anchor
-    comm: jax.Array
 
 
 def svrp_scan(
@@ -70,42 +70,27 @@ def svrp_scan(
     HERE, outside the scan; callers that already hold the hoisted state (e.g.
     Catalyst, whose shifted problems share eigenvectors) pass it via
     `prox_factors` to skip the recomputation.
+
+    This is the SEQUENTIAL substrate of the shared round definition
+    (`rounds.ROUND_DEFS["svrp"]`): initial anchor setup costs one
+    full-gradient round (3M), each round exchanges 2 + a Bernoulli-gated 3M,
+    and the full gradient is recomputed lazily under `lax.cond` only on
+    refresh steps.
     """
-    M = problem.num_clients
     eta = jnp.asarray(hp.eta, x0.dtype)
-    p = jnp.asarray(hp.p, x0.dtype)
     solver = get_prox_solver(prox_solver, problem)
     factors = prox_factors
     if factors is None:
         factors = solver.prepare(problem)
 
-    # Initial anchor setup costs one full-gradient round: server broadcasts w_0
-    # (M), clients return gradients (M), server broadcasts grad f(w_0) (M).
-    init = SVRPState(x=x0, w=x0, gbar=problem.full_grad(x0), comm=jnp.asarray(3 * M))
-
-    def step(state: SVRPState, key_k):
-        key_m, key_c = jax.random.split(key_k)
-        m = jax.random.randint(key_m, (), 0, M)
-
-        g_k = state.gbar - problem.grad(m, state.w)
-        z = state.x - eta * g_k
-        x_next = solver.solve(
+    ops = RoundOps(
+        problem, hp, x_star, x0.dtype, batched=False,
+        prox=lambda m, z: solver.solve(
             problem, factors, m, z, eta,
             smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
-        )
-
-        c = jax.random.bernoulli(key_c, p)
-        w_next = jnp.where(c, x_next, state.w)
-        # Lazy full gradient: only recomputed (and paid for) on refresh.
-        gbar_next = jax.lax.cond(c, lambda: problem.full_grad(w_next), lambda: state.gbar)
-        comm = state.comm + 2 + 3 * M * c.astype(jnp.int32)
-
-        d2 = jnp.sum((x_next - x_star) ** 2)
-        return SVRPState(x_next, w_next, gbar_next, comm), (d2, comm)
-
-    keys = jax.random.split(key, num_steps)
-    final, (d2s, comms) = jax.lax.scan(step, init, keys)
-    return RunResult(dist_sq=d2s, comm=comms, x_final=final.x)
+        ),
+    )
+    return scan_rounds(ROUND_DEFS["svrp"], ops, x0, key, num_steps)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "prox_solver", "prox_steps", "prox_tol"))

@@ -30,10 +30,21 @@ Design rules enforced by the core refactor this engine relies on:
 * per-trial PRNG keys are built with `vmap(jax.random.key)`, so trial
   `(seed=s)` reproduces `run_*(..., key=jax.random.key(s))` exactly.
 
-The `fused=True` path for the "gd" prox solver additionally hand-batches the
-scan state to `(B, d)` and routes the Algorithm-7 inner loop through the
-batched Pallas kernel (`kernels.prox_update_batched`), keeping the sweep's
-hot loop a single fused launch per GD step.
+Substrates (see `repro.core.rounds`, where each algorithm's round body is
+defined exactly once): for the rounds-defined algorithms (membership in
+`rounds.ROUND_DEFS`) the engine's DEFAULT batched execution is
+`rounds.registry_batched_scan` — a batch-level scan with the per-trial
+sampling and registry prox solve vmapped inside the round, which makes the
+anchor refresh batch-aware (`lax.cond(jnp.any(c))`: the full-gradient
+recompute only runs on steps where some trial actually refreshes — the >=1x
+caveat-track CI gate rests on this).  Algorithms outside `ROUND_DEFS`
+(baselines, composite, catalyzed's non-fused path) run as plain `jax.vmap`
+of their sequential `*_scan` over the `(B,)` trial axis.  `fused=True`
+switches rounds-defined algos to `rounds.batched_scan`: the same hand-batched
+state with the Algorithm-7 local solves routed through the batched Pallas
+kernels.  Which algorithms fuse, and which static keys supply their
+inner-loop/round counts, is declared on their `AlgoSpec` (`fusable` /
+`fused_inner_steps` / `fused_round_steps`).
 
 `shard="data"` lays the `(B,)` trial axis over the local device mesh via
 shard_map (one group of trials per device), padding B up to a multiple of the
@@ -68,7 +79,13 @@ from repro.core.catalyst import CatalyzedSVRPParams, catalyzed_svrp_scan
 from repro.core.composite import CompositeSVRPParams, composite_svrp_scan
 from repro.core.deep import DeepSVRPScanParams, deep_svrp_scan
 from repro.core.minibatch import MinibatchParams, svrp_minibatch_scan
-from repro.core.prox import get_prox_solver, prox_gd_batched
+from repro.core.prox import get_prox_solver
+from repro.core.rounds import (
+    ROUND_DEFS,
+    batched_scan,
+    fused_oracle_kind,
+    registry_batched_scan,
+)
 from repro.core.sppm import SPPMParams, sppm_scan
 from repro.core.svrp import SVRPParams, svrp_scan
 from repro.core.types import RunResult
@@ -91,7 +108,15 @@ class AlgoSpec:
     scan_fn: Callable[..., RunResult]
     defaults: Mapping[str, Any]
     static: Mapping[str, Any]
-    fusable: bool = False  # has a hand-batched fused-kernel "gd" path
+    fusable: bool = False  # runs on the fused substrate (rounds.batched_scan)
+    # Which static-config key supplies the fused path's Algorithm-7 inner step
+    # count ("prox_steps" for registry-prox algos, "local_steps" for
+    # DeepSVRP's explicit-stepsize local loop).  Declared here so the fused
+    # driver can never pick the wrong inner-step count for a new algo.
+    fused_inner_steps: str | None = None
+    # Which static-config key supplies the fused scan's ROUND count per
+    # trajectory segment ("inner_steps" for Catalyst's nested stages).
+    fused_round_steps: str = "num_steps"
     deterministic: bool = False  # ignores the PRNG key; run_batch rejects multi-seed sweeps
     requires_x_star: bool = False  # problem.minimizer() is NOT the right reference point
 
@@ -107,17 +132,18 @@ ALGOS: dict[str, AlgoSpec] = {
     "sppm": AlgoSpec(
         SPPMParams, sppm_scan,
         defaults={"eta": _REQUIRED, "smoothness": 0.0},
-        static=_PROX_STATIC, fusable=True,
+        static=_PROX_STATIC, fusable=True, fused_inner_steps="prox_steps",
     ),
     "svrp": AlgoSpec(
         SVRPParams, svrp_scan,
         defaults={"eta": _REQUIRED, "p": _REQUIRED, "smoothness": 0.0},
-        static=_PROX_STATIC, fusable=True,
+        static=_PROX_STATIC, fusable=True, fused_inner_steps="prox_steps",
     ),
     "svrp_minibatch": AlgoSpec(
         MinibatchParams, svrp_minibatch_scan,
         defaults={"eta": _REQUIRED, "p": _REQUIRED, "smoothness": 0.0},
         static={**_PROX_STATIC, "batch_clients": _REQUIRED},
+        fusable=True, fused_inner_steps="prox_steps",
     ),
     "catalyzed_svrp": AlgoSpec(
         CatalyzedSVRPParams, catalyzed_svrp_scan,
@@ -129,6 +155,8 @@ ALGOS: dict[str, AlgoSpec] = {
             "num_outer": _REQUIRED, "inner_steps": _REQUIRED,
             "prox_solver": "exact", "prox_steps": 50, "prox_tol": 1e-10,
         },
+        fusable=True, fused_inner_steps="prox_steps",
+        fused_round_steps="inner_steps",  # per-stage round count (nested scan)
     ),
     "sgd": AlgoSpec(
         SGDParams, sgd_scan,
@@ -174,7 +202,8 @@ ALGOS: dict[str, AlgoSpec] = {
         DeepSVRPScanParams, deep_svrp_scan,
         defaults={"eta": _REQUIRED, "local_lr": _REQUIRED, "anchor_prob": _REQUIRED},
         static={"num_steps": _REQUIRED, "local_steps": 4},
-        fusable=True,  # its local solver IS Algorithm 7 (no prox_solver switch)
+        # its local solver IS Algorithm 7 (no prox_solver switch)
+        fusable=True, fused_inner_steps="local_steps",
     ),
 }
 
@@ -288,6 +317,27 @@ def _vmapped_trials(scan_fn: Callable, static_items: tuple) -> Callable:
 
 
 @functools.lru_cache(maxsize=None)
+def _registry_body(algo: str, static_items: tuple) -> Callable:
+    """The rounds-defined algorithms' default batched driver: the shared round
+    definition hand-batched with its registry prox solver vmapped per trial
+    (`rounds.registry_batched_scan`).  Numerically identical to vmapping the
+    whole per-trial scan, but the anchor refresh is BATCH-AWARE — the
+    full-gradient recompute only runs on steps where some trial refreshes,
+    instead of for every trial every step (the old ~0.5x logistic caveat)."""
+    cfg = dict(static_items)
+
+    def run(problem, x0, x_star, keys, hp):
+        return registry_batched_scan(algo, problem, x0, x_star, keys, hp, **cfg)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _registry_runner(algo: str, static_items: tuple) -> Callable:
+    return jax.jit(_registry_body(algo, static_items))
+
+
+@functools.lru_cache(maxsize=None)
 def _batched_runner(scan_fn: Callable, static_items: tuple) -> Callable:
     """One jitted vmapped driver per (scan_fn, static-config) pair.
 
@@ -397,12 +447,13 @@ def run_batch(
     (seed-major).  Remaining kwargs are the algo's static config (num_steps,
     prox_solver, ...), shared by every trial.
 
-    `fused=True` (fusable algos running Algorithm 7: svrp/sppm with
-    prox_solver="gd", and deep_svrp always) switches to the hand-batched
-    driver whose inner loop runs through the batched Pallas prox kernel;
-    `interpret` (fused-only) selects the kernel's interpreter mode and
-    defaults to True, the CPU-safe choice — pass interpret=False on real TPU
-    hardware to compile the kernel.
+    `fused=True` (fusable algos running Algorithm 7: svrp/sppm/
+    svrp_minibatch/catalyzed_svrp with prox_solver="gd", and deep_svrp
+    always) switches to the fused substrate (`rounds.batched_scan`):
+    hand-batched `(B, d)` state, local solves through the batched Pallas
+    kernels, batch-aware anchor refresh; `interpret` (fused-only) selects the
+    kernel's interpreter mode and defaults to True, the CPU-safe choice —
+    pass interpret=False on real TPU hardware to compile the kernel.
 
     `shard="data"` additionally lays the `(B,)` trial axis over the device
     mesh (`devices` defaults to all local devices): B is padded up to a
@@ -429,22 +480,27 @@ def run_batch(
     if devices is not None and shard is None:
         raise ValueError("devices= only applies with shard='data' (did you forget it?)")
     if fused:
-        # svrp/sppm fuse only their "gd" prox path; deep_svrp's local solver
-        # IS Algorithm 7, so it has no prox_solver switch to check.
+        # Registry-prox algos fuse only their "gd" path; deep_svrp's local
+        # solver IS Algorithm 7, so it has no prox_solver switch to check.
         if not (spec.fusable and cfg.get("prox_solver", "gd") == "gd"):
             raise ValueError(
                 f"{algo}: fused=True requires a fusable algo with prox_solver='gd'"
             )
-        _fused_oracle_kind(problem)  # clear trace-time error for unsupported problems
+        fused_oracle_kind(problem)  # clear trace-time error for unsupported problems
         interpret = True if interpret is None else interpret
-        inner = cfg["prox_steps"] if "prox_steps" in cfg else cfg["local_steps"]
-        body = _fused_body(algo, cfg["num_steps"], inner, interpret)
-        runner = _fused_runner(algo, cfg["num_steps"], inner, interpret)
+        static_items = tuple(sorted(cfg.items()))
+        body = _fused_body(algo, static_items, interpret)
+        runner = _fused_runner(algo, static_items, interpret)
     else:
         if interpret is not None:
             raise ValueError("interpret only applies to the fused=True Pallas path")
-        body = _vmapped_trials(spec.scan_fn, tuple(sorted(cfg.items())))
-        runner = _batched_runner(spec.scan_fn, tuple(sorted(cfg.items())))
+        if algo in ROUND_DEFS:
+            static_items = tuple(sorted(cfg.items()))
+            body = _registry_body(algo, static_items)
+            runner = _registry_runner(algo, static_items)
+        else:
+            body = _vmapped_trials(spec.scan_fn, tuple(sorted(cfg.items())))
+            runner = _batched_runner(spec.scan_fn, tuple(sorted(cfg.items())))
 
     if shard is None:
         res = runner(problem, x0, x_star, keys, hp)
@@ -547,186 +603,42 @@ def _run_sharded(body, problem, x0, x_star, keys, hp, devices) -> RunResult:
     return jax.tree.map(lambda a: a[:B], res)
 
 
-# ---------------------------------------------------------------- fused "gd" path
+# -------------------------------------------------------- fused substrate path
 #
-# Hand-batched scans for the approximate-prox (Algorithm 7) solvers: state is
-# (B, d), sampling is vmapped per-trial (bit-identical key usage to the
-# sequential drivers), and the inner prox-GD loop goes through the batched
-# Pallas kernel so each GD step is one fused launch for the whole sweep —
-# per device, under shard="data".
-#
-# Two per-problem oracles: quadratic-family problems batch the generic
-# gradient through the ELEMENTWISE kernel (`kernels.prox_update_batched`, one
-# launch per GD step); logistic problems go one level deeper through
-# `kernels.logistic_prox_gd_batched`, which keeps the sampled client data
-# VMEM-resident and runs the entire Algorithm-7 loop in ONE launch.
-
-
-def _fused_oracle_kind(problem) -> str:
-    """Which fused Algorithm-7 oracle this problem supports ("quadratic" /
-    "logistic"), raising a clear trace-time error otherwise."""
-    if hasattr(problem, "A") and hasattr(problem, "b"):
-        return "quadratic"
-    if hasattr(problem, "Z") and hasattr(problem, "lam"):
-        return "logistic"
-    raise ValueError(
-        f"fused=True has no batched Pallas prox path for {type(problem).__name__}: "
-        "supported oracles are the quadratic family (A/b attrs; generic gradient "
-        "through kernels.prox_update_batched) and the logistic family (Z/y/lam "
-        "attrs; kernels.logistic_prox_gd_batched) — run with fused=False instead"
-    )
-
-
-def _prox_gd_fused(problem, m, z, eta, L, prox_steps, interpret):
-    """The batched Algorithm-7 solve of one fused engine step: per-trial
-    sampled client `m` (B,), targets `z` (B, d), per-trial eta/L scalars."""
-    if _fused_oracle_kind(problem) == "logistic":
-        from repro.kernels.logistic_prox import logistic_prox_gd_batched
-
-        A = jnp.take(problem.Z, m, axis=0) * jnp.take(problem.y, m, axis=0)[:, :, None]
-        beta = 1.0 / (L + 1.0 / eta)
-        return logistic_prox_gd_batched(
-            A, z, beta, 1.0 / eta, problem.lam, prox_steps, interpret=interpret
-        )
-    grad_b = jax.vmap(problem.grad)
-    return prox_gd_batched(
-        lambda y: grad_b(m, y), z, eta, L, prox_steps,
-        use_kernel=True, interpret=interpret,
-    )
+# The hand-written per-algorithm fused step bodies that used to live here
+# (_svrp_step_fused / _sppm_step_fused / _deep_svrp_step_fused) are gone:
+# every fused algo now executes its ONE shared round definition
+# (`repro.core.rounds.ROUND_DEFS`) on the fused substrate via
+# `rounds.batched_scan` — per-trial sampling vmapped (bit-identical key usage
+# to the sequential drivers), Algorithm-7 local solves through the batched
+# Pallas kernels, anchor refresh batch-aware.  This driver only resolves the
+# AlgoSpec's static config into batched_scan's arguments and caches the
+# jitted/shard-mappable callables.
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_body(algo: str, num_steps: int, prox_steps: int, interpret: bool) -> Callable:
-    """The unjitted hand-batched driver (jitted by `_fused_runner`; shard-mapped
-    raw by the sharded path so each device runs its own fused block)."""
-    step_fused = {
-        "svrp": _svrp_step_fused,
-        "sppm": _sppm_step_fused,
-        "deep_svrp": _deep_svrp_step_fused,
-    }[algo]
+def _fused_body(algo: str, static_items: tuple, interpret: bool) -> Callable:
+    """The unjitted fused-substrate driver (jitted by `_fused_runner`;
+    shard-mapped raw by the sharded path so each device runs its own fused
+    block).  `static_items` is the algo's full sorted static config — the
+    AlgoSpec's `fused_inner_steps` names which entry feeds the Algorithm-7
+    inner loop, so no per-algo special-casing here."""
+    spec = ALGOS[algo]
+    cfg = dict(static_items)
+    inner_steps = cfg[spec.fused_inner_steps]
+    num_steps = cfg[spec.fused_round_steps]
+    extra = {k: cfg[k] for k in ("batch_clients", "num_outer") if k in cfg}
 
     def run(problem, x0, x_star, keys, hp):
-        B = keys.shape[0]
-        d = x0.shape[-1]
-        M = problem.num_clients
-        eta = jnp.broadcast_to(jnp.asarray(hp.eta, x0.dtype), (B,))
-        L = jnp.broadcast_to(
-            jnp.asarray(getattr(hp, "smoothness", 0.0), x0.dtype), (B,)
-        )
-        xB = jnp.broadcast_to(x0, (B, d))
-
-        # Per-trial per-step keys, identical to jax.random.split in the
-        # sequential scan: (B, num_steps) -> scan over axis 0 = step index.
-        step_keys = jnp.swapaxes(
-            jax.vmap(lambda k: jax.random.split(k, num_steps))(keys), 0, 1
-        )
-
-        carry, extras = _fused_init(algo, problem, hp, xB, x0, B, M)
-
-        def step(state, keys_k):
-            return step_fused(
-                problem, state, keys_k, eta, L, x_star, prox_steps, interpret, extras
-            )
-
-        final, (d2s, comms) = jax.lax.scan(step, carry, step_keys)
-        return RunResult(
-            dist_sq=jnp.swapaxes(d2s, 0, 1),
-            comm=jnp.swapaxes(comms, 0, 1),
-            x_final=final[0],
+        return batched_scan(
+            algo, problem, x0, x_star, keys, hp,
+            num_steps=num_steps, inner_steps=inner_steps, interpret=interpret,
+            **extra,
         )
 
     return run
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_runner(algo: str, num_steps: int, prox_steps: int, interpret: bool) -> Callable:
-    return jax.jit(_fused_body(algo, num_steps, prox_steps, interpret))
-
-
-def _fused_init(algo, problem, hp, xB, x0, B, M):
-    if algo == "svrp":
-        gbar = jnp.broadcast_to(problem.full_grad(x0), xB.shape)
-        comm = jnp.full((B,), 3 * M)
-        p = jnp.broadcast_to(jnp.asarray(hp.p, x0.dtype), (B,))
-        return (xB, xB, gbar, comm), (p,)
-    if algo == "deep_svrp":
-        gbar = jnp.broadcast_to(problem.full_grad(x0), xB.shape)
-        comm = jnp.full((B,), 3 * M)
-        p = jnp.broadcast_to(jnp.asarray(hp.anchor_prob, x0.dtype), (B,))
-        beta = jnp.broadcast_to(jnp.asarray(hp.local_lr, x0.dtype), (B,))
-        return (xB, xB, gbar, comm), (p, beta)
-    comm = jnp.zeros((B,), dtype=jnp.asarray(0).dtype)
-    return (xB, comm), ()
-
-
-def _sppm_step_fused(problem, state, keys_k, eta, L, x_star, prox_steps, interpret, extras):
-    x, comm = state
-    M = problem.num_clients
-    m = jax.vmap(lambda k: jax.random.randint(k, (), 0, M))(keys_k)
-    x_next = _prox_gd_fused(problem, m, x, eta, L, prox_steps, interpret)
-    comm = comm + 2
-    d2 = jnp.sum((x_next - x_star[None]) ** 2, axis=-1)
-    return (x_next, comm), (d2, comm)
-
-
-def _svrp_step_fused(problem, state, keys_k, eta, L, x_star, prox_steps, interpret, extras):
-    x, w, gbar, comm = state
-    (p,) = extras
-    M = problem.num_clients
-    split = jax.vmap(jax.random.split)(keys_k)  # (B, 2) keys
-    key_m, key_c = split[:, 0], split[:, 1]
-    m = jax.vmap(lambda k: jax.random.randint(k, (), 0, M))(key_m)
-    grad_b = jax.vmap(problem.grad)
-
-    g_k = gbar - grad_b(m, w)
-    z = x - eta[:, None] * g_k
-    x_next = _prox_gd_fused(problem, m, z, eta, L, prox_steps, interpret)
-
-    c = jax.vmap(jax.random.bernoulli)(key_c, p)
-    w_next = jnp.where(c[:, None], x_next, w)
-    gbar_next = jnp.where(c[:, None], jax.vmap(problem.full_grad)(w_next), gbar)
-    comm = comm + 2 + 3 * M * c.astype(jnp.int32)
-    d2 = jnp.sum((x_next - x_star[None]) ** 2, axis=-1)
-    return (x_next, w_next, gbar_next, comm), (d2, comm)
-
-
-def _deep_svrp_step_fused(
-    problem, state, keys_k, eta, L, x_star, local_steps, interpret, extras
-):
-    """DeepSVRP's full-participation round, hand-batched to (B*M, d) rows so
-    the K local prox-GD steps of EVERY cohort of EVERY trial are one batched
-    Pallas launch each (per-row scalars: trial b's local_lr / 1/eta)."""
-    from repro.kernels.prox_update import prox_update_batched
-
-    x, w, gbar, comm = state
-    p, beta = extras
-    B, d = x.shape
-    M = problem.num_clients
-    clients = jnp.arange(M)
-    grad_rows = jax.vmap(problem.grad)
-
-    g_anchor = jax.vmap(
-        lambda wb: jax.vmap(problem.grad, in_axes=(0, None))(clients, wb)
-    )(w)  # (B, M, d)
-    z = x[:, None, :] - eta[:, None, None] * (gbar[:, None, :] - g_anchor)
-    z_rows = z.reshape(B * M, d)
-    m_rows = jnp.tile(clients, B)
-    beta_rows = jnp.repeat(beta, M)
-    inv_eta_rows = jnp.repeat(1.0 / eta, M)
-
-    def body(_, y):
-        g = grad_rows(m_rows, y)
-        return prox_update_batched(
-            y, g, z_rows, beta_rows, inv_eta_rows, interpret=interpret
-        )
-
-    y0 = jnp.broadcast_to(x[:, None, :], (B, M, d)).reshape(B * M, d)
-    y = jax.lax.fori_loop(0, local_steps, body, y0)
-    x_next = jnp.mean(y.reshape(B, M, d), axis=1)
-
-    c = jax.vmap(jax.random.bernoulli)(keys_k, p)
-    w_next = jnp.where(c[:, None], x_next, w)
-    gbar_next = jnp.where(c[:, None], jax.vmap(problem.full_grad)(w_next), gbar)
-    comm = comm + 2 * M + 2 * M * c.astype(jnp.int32)
-    d2 = jnp.sum((x_next - x_star[None]) ** 2, axis=-1)
-    return (x_next, w_next, gbar_next, comm), (d2, comm)
+def _fused_runner(algo: str, static_items: tuple, interpret: bool) -> Callable:
+    return jax.jit(_fused_body(algo, static_items, interpret))

@@ -286,11 +286,14 @@ def prox_update(y, g, z, local_lr, inv_eta):
 def prox_update_tree(y_tree, g_tree, z_tree, local_lr, inv_eta):
     """Fused SVRP local step over a whole parameter pytree.
 
+    This is the default `update_fn` of the shared DeepSVRP local solver
+    (`core.rounds.local_prox_gd_tree`), which the pod step (launch/steps.py)
+    and the pytree round (`core.deep.deep_svrp_round`) both scan.
+
     `g` leaves are cast to the matching `y` leaf dtype (gradients arrive in
     f32 against bf16 params on the pod).  On the Pallas path the leaves are
     flattened and concatenated per dtype group so each local prox-GD step is
-    ONE batched kernel launch per dtype instead of one launch per leaf — the
-    DeepSVRP pod step's hot loop (launch/steps.py) routes through here.  On
+    ONE batched kernel launch per dtype instead of one launch per leaf.  On
     the jnp path XLA already fuses the leaf-wise elementwise update, so the
     concat copies would be pure overhead and are skipped.
     """

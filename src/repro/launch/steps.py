@@ -28,6 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.deep import DeepSVRPConfig
+from repro.core.rounds import local_prox_gd_tree
 from repro.kernels import ops as kops
 from repro.launch import sharding as shd
 from repro.launch.mesh import data_axis_names, num_cohorts
@@ -173,17 +174,15 @@ def make_svrp_train_step(cfg: ModelConfig, mesh, svrp: DeepSVRPConfig):
         # (2) prox target z = x - eta g_k
         z = jax.tree.map(lambda xx, g: xx - (svrp.eta * g).astype(xx.dtype), x, g_k)
 
-        # (3) K local prox-GD steps (Algorithm 7).  prox_update_tree fuses the
-        #     whole-tree elementwise update into one batched kernel launch per
-        #     dtype on the Pallas path (leaf-wise jnp otherwise).
-        def local_step(carry, _):
-            y, _ = carry
-            g = grad_fn(y, batch)
-            y_next = kops.prox_update_tree(y, g, z, svrp.local_lr, 1.0 / svrp.eta)
-            return (y_next, g), None
-
-        (y, g_local_last), _ = jax.lax.scan(
-            local_step, (x, g_anchor), None, length=svrp.local_steps
+        # (3) K local prox-GD steps (Algorithm 7) — the SAME shared DeepSVRP
+        #     local solver the convex round definition uses
+        #     (core.rounds.local_prox_gd_tree); kops.prox_update_tree fuses
+        #     the whole-tree elementwise update into one batched kernel
+        #     launch per dtype on the Pallas path (leaf-wise jnp otherwise).
+        y, g_local_last = local_prox_gd_tree(
+            lambda p: grad_fn(p, batch), z, x,
+            svrp.local_lr, 1.0 / svrp.eta, svrp.local_steps,
+            update_fn=kops.prox_update_tree, g0=g_anchor,
         )
 
         # (4) server aggregation: ONE pmean over the client axes (f32-safe;

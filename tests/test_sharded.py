@@ -143,10 +143,11 @@ def test_sharded_lowering_has_no_cross_device_collectives():
     must contain no collective ops over the 'data' mesh axis."""
     out = _run(
         """
-from repro.experiments.runner import _sharded_runner, _vmapped_trials
-from repro.core.svrp import SVRPParams, svrp_scan
-body = _vmapped_trials(svrp_scan, tuple(sorted(
-    {"num_steps": 20, "prox_solver": "exact", "prox_steps": 50}.items())))
+from repro.experiments.runner import _sharded_runner, _registry_body
+from repro.core.svrp import SVRPParams
+body = _registry_body("svrp", tuple(sorted(
+    {"num_steps": 20, "prox_solver": "exact", "prox_steps": 50,
+     "prox_tol": 1e-10}.items())))
 keys = jax.vmap(jax.random.key)(jnp.arange(16, dtype=jnp.uint32))
 hp = SVRPParams(eta=jnp.full((16,), eta), p=jnp.full((16,), 1 / 12),
                 smoothness=jnp.zeros((16,)))

@@ -1,110 +1,271 @@
-"""Data pipeline, optimizers, checkpointing."""
+"""Round-substrate registry: one parametrized suite over EVERY ALGOS entry.
 
+The substrate layer (`repro.core.rounds`) defines each algorithm's round once
+and executes it three ways; this suite is the gate that keeps the three
+executions interchangeable — for every registered algorithm:
+
+    sequential (per-trial scan)  ==  vmapped (run_batch)
+                                 ==  sharded (run_batch(shard="data"))
+                                 ==  fused   (run_batch(fused=True), where
+                                              the AlgoSpec declares support)
+
+to <= 1e-5, with the Section-4.2 communication accounting EXACT (integer
+arrays equal, dtypes equal, init-term 3M-vs-0 split and refresh increments
+audited in closed form).  It replaces the per-algorithm one-off equivalence
+tests that used to accumulate in tests/test_experiments.py: a new ALGOS entry
+fails `test_every_algo_has_a_case` until it is wired into the table below,
+and then inherits the whole substrate contract.
+
+Under CI's sharded-8dev matrix entry this file runs with 8 simulated XLA host
+devices, so the shard="data" cases exercise real pad+mask blocks, not just
+the degenerate single-device mesh.
+"""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.data import ShardedBatcher, SyntheticLMDataset, client_partition
-from repro.optim import (
-    adamw_init,
-    adamw_update,
-    clip_by_global_norm,
-    cosine_schedule,
-    linear_warmup_cosine,
-    sgdm_init,
-    sgdm_update,
+from repro.core import (
+    catalyst_inner_iterations,
+    composite_minimizer_pgd,
+    prox_l2ball,
+    theorem2_stepsize,
+    theorem3_gamma,
 )
+from repro.experiments import ALGOS, run_batch, run_sequential
+from repro.problems import make_synthetic_quadratic
+
+M = 10
+SEEDS = 2
 
 
-# ------------------------------------------------------------------- data
-def test_synthetic_dataset_shapes_and_determinism():
-    ds = SyntheticLMDataset(vocab_size=64, num_clients=3, seed=0)
-    b = ds.batch(0, batch=4, seq_len=16)
-    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
-    assert b["tokens"].dtype == np.int32
-    assert b["tokens"].min() >= 0 and b["tokens"].max() < 64
-    # labels are next-token shifted
-    raw = SyntheticLMDataset(vocab_size=64, num_clients=3, seed=0).sample(0, 4, 16)
-    np.testing.assert_array_equal(raw[:, :-1], b["tokens"])
-    np.testing.assert_array_equal(raw[:, 1:], b["labels"])
+@pytest.fixture(scope="module")
+def prob():
+    return make_synthetic_quadratic(num_clients=M, dim=6, mu=1.0, L=80.0,
+                                    delta=4.0, seed=1)
 
 
-def test_heterogeneity_knob():
-    """Smaller alpha => clients use more distinct topic mixes."""
-    lo = SyntheticLMDataset(64, num_clients=8, alpha=0.05, seed=1)
-    hi = SyntheticLMDataset(64, num_clients=8, alpha=100.0, seed=1)
-    spread = lambda ds: float(np.std(ds.mix, axis=0).mean())
-    assert spread(lo) > spread(hi)
+@pytest.fixture(scope="module")
+def cases(prob):
+    """Per-algorithm sweep configs: (run_batch kwargs, fused-variant kwargs)."""
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    dmax = float(prob.similarity_max())
+    L = float(prob.smoothness_max())
+    eta = theorem2_stepsize(mu, delta)
+    gamma = max(theorem3_gamma(mu, delta, M), 0.5)
+    inner = min(catalyst_inner_iterations(mu, delta, M), 40)
+    eta_in = theorem2_stepsize(mu + gamma, delta)
+    beta_deep = 0.8 / (L + 2.0)
+    prox_R = prox_l2ball(0.1)
+    x_star_c = composite_minimizer_pgd(
+        prob, prox_R, L=float(prob.smoothness()), num_steps=20_000
+    )
 
-
-def test_sharded_batcher_layout():
-    ds = SyntheticLMDataset(32, num_clients=4, seed=0)
-    b = ShardedBatcher(ds, num_cohorts=4, per_cohort_batch=2, seq_len=8).next_batch()
-    assert b["tokens"].shape == (8, 8)
-
-
-def test_client_partition_covers_everything():
-    parts = client_partition(103, 7, alpha=0.5, seed=0)
-    allidx = np.concatenate(parts)
-    assert len(allidx) == 103 and len(np.unique(allidx)) == 103
-
-
-# ------------------------------------------------------------------ optim
-def test_adamw_optimizes_quadratic():
-    params = {"w": jnp.asarray([5.0, -3.0])}
-    opt = adamw_init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
-    for _ in range(300):
-        g = jax.grad(loss)(params)
-        params, opt = adamw_update(g, opt, params, lr=0.1, weight_decay=0.0)
-    assert float(loss(params)) < 1e-4
-    assert int(opt.step) == 300
-
-
-def test_sgdm_optimizes_quadratic():
-    params = {"w": jnp.asarray([5.0, -3.0])}
-    opt = sgdm_init(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
-    for _ in range(200):
-        g = jax.grad(loss)(params)
-        params, opt = sgdm_update(g, opt, params, lr=0.05)
-    assert float(loss(params)) < 1e-4
-
-
-def test_clip_by_global_norm():
-    g = {"a": jnp.ones(4) * 10.0}
-    clipped, norm = clip_by_global_norm(g, 1.0)
-    assert np.isclose(float(norm), 20.0)
-    assert np.isclose(float(jnp.linalg.norm(clipped["a"])), 1.0)
-    # below threshold: untouched
-    g2 = {"a": jnp.ones(4) * 0.01}
-    c2, _ = clip_by_global_norm(g2, 1.0)
-    np.testing.assert_array_equal(np.asarray(c2["a"]), np.asarray(g2["a"]))
-
-
-def test_schedules():
-    assert float(cosine_schedule(jnp.asarray(0), base_lr=1.0, total_steps=100)) == 1.0
-    end = float(cosine_schedule(jnp.asarray(100), base_lr=1.0, total_steps=100))
-    assert np.isclose(end, 0.1)
-    w = linear_warmup_cosine(jnp.asarray(5), base_lr=1.0, warmup=10, total_steps=100)
-    assert np.isclose(float(w), 0.5)
-
-
-# ------------------------------------------------------------- checkpoint
-def test_checkpoint_roundtrip(tmp_path):
-    tree = {
-        "params": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(3, jnp.bfloat16)},
-        "step": jnp.asarray(7, jnp.int32),
-        "nested": [jnp.zeros(2), jnp.ones(2)],
+    gd = {"prox_solver": "gd", "prox_steps": 20}
+    return {
+        "sppm": (
+            dict(grid={"eta": [0.05, 0.1]}, seeds=SEEDS, num_steps=60),
+            dict(grid={"eta": [0.05, 0.1], "smoothness": L}, seeds=SEEDS,
+                 num_steps=60, **gd),
+        ),
+        "svrp": (
+            dict(grid={"eta": [eta, eta / 2], "p": 0.2}, seeds=SEEDS, num_steps=60),
+            dict(grid={"eta": [eta, eta / 2], "p": 0.2, "smoothness": L},
+                 seeds=SEEDS, num_steps=60, **gd),
+        ),
+        "svrp_minibatch": (
+            dict(grid={"eta": 3 * eta, "p": 0.25}, seeds=SEEDS, num_steps=50,
+                 batch_clients=3),
+            dict(grid={"eta": 3 * eta, "p": 0.25, "smoothness": L}, seeds=SEEDS,
+                 num_steps=50, batch_clients=3, **gd),
+        ),
+        "catalyzed_svrp": (
+            dict(grid={"mu": mu, "gamma": gamma, "eta": eta_in, "p": 1 / M},
+                 seeds=SEEDS, num_outer=3, inner_steps=inner),
+            dict(grid={"mu": mu, "gamma": gamma, "eta": eta_in, "p": 1 / M,
+                       "smoothness": L},
+                 seeds=SEEDS, num_outer=3, inner_steps=inner, **gd),
+        ),
+        "deep_svrp": (
+            dict(grid={"eta": 0.5, "local_lr": beta_deep, "anchor_prob": 0.25},
+                 seeds=SEEDS, num_steps=50, local_steps=4),
+            dict(grid={"eta": 0.5, "local_lr": beta_deep, "anchor_prob": 0.25},
+                 seeds=SEEDS, num_steps=50, local_steps=4),
+        ),
+        "sgd": (
+            dict(grid={"stepsize": 1 / (3 * L)}, seeds=SEEDS, num_steps=80),
+            None,
+        ),
+        "svrg": (
+            dict(grid={"stepsize": 1 / (6 * L), "p": 0.2}, seeds=SEEDS,
+                 num_steps=80),
+            None,
+        ),
+        "scaffold": (
+            dict(grid={"local_lr": 1 / (4 * L)}, seeds=SEEDS, num_rounds=40,
+                 local_steps=4),
+            None,
+        ),
+        "dane": (
+            dict(grid={"theta": dmax}, num_rounds=15),
+            None,
+        ),
+        "acc_extragradient": (
+            dict(grid={"theta": dmax, "mu": mu}, num_rounds=15),
+            None,
+        ),
+        "composite": (
+            dict(grid={"eta": [eta, eta / 2], "p": 0.2, "smoothness": L,
+                       "mu": mu},
+                 seeds=SEEDS, num_steps=50, prox_R=prox_R, x_star=x_star_c),
+            None,
+        ),
     }
-    d = str(tmp_path / "ckpt")
-    save_checkpoint(d, 7, tree)
-    save_checkpoint(d, 12, tree)
-    assert latest_step(d) == 12
-    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
-    restored = restore_checkpoint(d, 7, like)
-    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
-        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
-        assert a.dtype == b.dtype
+
+
+def _check(a, b, rtol=1e-5):
+    np.testing.assert_allclose(
+        np.asarray(a.dist_sq), np.asarray(b.dist_sq), rtol=rtol, atol=1e-24
+    )
+    np.testing.assert_array_equal(np.asarray(a.comm), np.asarray(b.comm))
+    assert a.comm.dtype == b.comm.dtype
+    np.testing.assert_allclose(
+        np.asarray(a.x_final), np.asarray(b.x_final), rtol=rtol, atol=1e-12
+    )
+    assert a.labels() == b.labels()
+
+
+def test_every_algo_has_a_case(cases):
+    """A new ALGOS entry must be wired into this suite to land."""
+    assert set(cases) == set(ALGOS)
+
+
+def test_fusable_specs_declare_inner_steps():
+    """Satellite of the substrate refactor: the Algorithm-7 inner-step count
+    is part of the AlgoSpec (`fused_inner_steps` naming a static key), so the
+    fused driver can never pick the wrong count for a new algo."""
+    for name, spec in ALGOS.items():
+        if spec.fusable:
+            assert spec.fused_inner_steps in spec.static, name
+            assert spec.fused_round_steps in spec.static, name
+        else:
+            assert spec.fused_inner_steps is None, name
+
+
+def test_fused_capability_set():
+    fusable = {name for name, spec in ALGOS.items() if spec.fusable}
+    assert fusable == {"sppm", "svrp", "svrp_minibatch", "catalyzed_svrp",
+                       "deep_svrp"}
+
+
+@pytest.mark.parametrize("algo", sorted(ALGOS))
+def test_sequential_matches_vmapped(algo, prob, cases):
+    kw, _ = cases[algo]
+    _check(run_sequential(algo, prob, **kw), run_batch(algo, prob, **kw))
+
+
+@pytest.mark.parametrize("algo", sorted(ALGOS))
+def test_sequential_matches_sharded(algo, prob, cases):
+    """shard="data" == sequential for every algo (pad+mask exercised under
+    CI's 8-device entry; degenerate 1-device mesh elsewhere)."""
+    kw, _ = cases[algo]
+    _check(run_sequential(algo, prob, **kw), run_batch(algo, prob, shard="data", **kw))
+
+
+@pytest.mark.parametrize(
+    "algo", sorted(name for name, spec in ALGOS.items() if spec.fusable)
+)
+def test_sequential_matches_fused(algo, prob, cases):
+    """The fused substrate (hand-batched state, Pallas Algorithm-7 solves,
+    batch-aware anchor refresh) reproduces the sequential oracle."""
+    _, kw = cases[algo]
+    _check(run_sequential(algo, prob, **kw), run_batch(algo, prob, fused=True, **kw))
+
+
+@pytest.mark.parametrize(
+    "algo", sorted(name for name, spec in ALGOS.items() if spec.fusable)
+)
+def test_sequential_matches_fused_sharded(algo, prob, cases):
+    _, kw = cases[algo]
+    _check(
+        run_sequential(algo, prob, **kw),
+        run_batch(algo, prob, fused=True, shard="data", **kw),
+    )
+
+
+# ------------------------------------------------ communication accounting
+# Section 4.2 parity audit: the unified rounds must reproduce the paper's
+# accounting exactly on every substrate — initial-term split (3M for anchor
+# init, 0 for anchor-free SPPM), per-round base cost, refresh increments.
+
+
+def test_comm_accounting_closed_form(prob, cases):
+    """Per-round increments take exactly the documented values."""
+    expected = {
+        # algo: (comm at step 0 options, per-step increment options)
+        "sppm": ({2}, {2}),
+        "svrp": ({3 * M + 2, 6 * M + 2}, {2, 2 + 3 * M}),
+        "svrp_minibatch": ({3 * M + 6, 6 * M + 6}, {6, 6 + 3 * M}),
+        "deep_svrp": ({5 * M, 7 * M}, {2 * M, 4 * M}),
+    }
+    for algo, (first_opts, inc_opts) in expected.items():
+        kw, _ = cases[algo]
+        comm = np.asarray(run_batch(algo, prob, **kw).comm)
+        assert set(np.unique(comm[:, 0])) <= first_opts, algo
+        incs = np.unique(np.diff(comm, axis=1))
+        assert set(incs.tolist()) <= inc_opts, (algo, incs)
+
+
+def test_comm_accounting_fused_parity(prob, cases):
+    """Fused comm trajectories are INTEGER-EXACT equal to sequential ones,
+    same dtype — accounting cannot drift between substrates."""
+    for algo in ("sppm", "svrp", "svrp_minibatch", "deep_svrp", "catalyzed_svrp"):
+        _, kw = cases[algo]
+        seq = run_sequential(algo, prob, **kw)
+        fus = run_batch(algo, prob, fused=True, **kw)
+        np.testing.assert_array_equal(np.asarray(seq.comm), np.asarray(fus.comm))
+        assert seq.comm.dtype == fus.comm.dtype, algo
+
+
+def test_catalyzed_comm_restarts_inner_accounting(prob, cases):
+    """Catalyst stage boundaries re-pay the 3M anchor init; within a stage
+    the SVRP increments apply on top of the carried offset."""
+    kw, _ = cases["catalyzed_svrp"]
+    comm = np.asarray(run_batch("catalyzed_svrp", prob, **kw).comm)
+    inner = kw["inner_steps"]
+    assert comm[0, 0] in (3 * M + 2, 6 * M + 2)
+    # first step of stage 2 = last comm of stage 1 + anchor re-init + round
+    boundary = comm[:, inner] - comm[:, inner - 1]
+    assert set(np.unique(boundary)) <= {3 * M + 2, 6 * M + 2}
+
+
+# ------------------------------------------------------------- error paths
+def test_interpret_without_fused_rejected(prob):
+    with pytest.raises(ValueError, match="interpret"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.1}, num_steps=5,
+                  interpret=True)
+
+
+def test_devices_without_shard_rejected(prob):
+    with pytest.raises(ValueError, match="shard"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.1}, num_steps=5,
+                  devices=jax.devices())
+
+
+def test_unknown_shard_mode_rejected(prob):
+    with pytest.raises(ValueError, match="unknown shard mode"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.1}, num_steps=5,
+                  shard="model")
+
+
+def test_fused_requires_gd_solver(prob):
+    with pytest.raises(ValueError, match="fused=True"):
+        run_batch("svrp_minibatch", prob, grid={"eta": 0.1, "p": 0.1},
+                  num_steps=5, batch_clients=2, fused=True,
+                  prox_solver="exact")
+
+
+def test_fused_rejects_unfusable_algo(prob):
+    with pytest.raises(ValueError, match="fused=True"):
+        run_batch("svrg", prob, grid={"stepsize": 1e-3, "p": 0.1},
+                  num_steps=5, fused=True)
