@@ -12,12 +12,24 @@ A baseline may additionally carry an ``absolute_floors`` map: hard minimums a
 measured ratio must clear regardless of the relative floor (e.g. the logistic
 track's acceptance line "batch-vs-loop >= 5x on CPU").
 
+``--trajectory PATH`` gates the same ratios against a second JSON (the
+checked-in last RECORDED measurement, repo-root BENCH_sweep.json) at
+``--trajectory-floor`` (default 0.42 — the baseline tolerance compounded
+with its ~40% derate, so this gate is no stricter than the baseline one),
+replacing the second check_bench invocation CI used to run.
+
+``--step-summary [PATH]`` renders one markdown table — measured vs
+baseline-gate vs trajectory-floor, pass/fail per ratio — to PATH (default:
+the file named by $GITHUB_STEP_SUMMARY, i.e. the Actions job summary), so a
+regression is readable in the run page without downloading the JSON artifact.
+
 Exit code 0 = all gated ratios hold; 1 = regression; 2 = malformed input.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 # Ratios the gate enforces.  Sharded ratios are NOT gated: the bench job runs
@@ -41,7 +53,7 @@ GATED = (
 # shard_* (single-device bench job).
 
 
-def check(measured: dict, baseline: dict, floor: float) -> list[str]:
+def check(measured: dict, baseline: dict, floor: float, *, label: str = "baseline") -> list[str]:
     failures = []
     gated = 0
     for key in GATED:
@@ -51,15 +63,15 @@ def check(measured: dict, baseline: dict, floor: float) -> list[str]:
             continue  # baseline predates this ratio — nothing to hold
         gated += 1
         if got is None:
-            failures.append(f"{key}: missing from measured results (baseline {base:.2f}x)")
+            failures.append(f"{key}: missing from measured results ({label} {base:.2f}x)")
             continue
         if got < floor * base:
             failures.append(
-                f"{key}: measured {got:.2f}x < {floor:.2f} * baseline {base:.2f}x "
+                f"{key}: measured {got:.2f}x < {floor:.2f} * {label} {base:.2f}x "
                 f"(= {floor * base:.2f}x floor)"
             )
         else:
-            print(f"ok: {key}: {got:.2f}x (baseline {base:.2f}x, floor {floor * base:.2f}x)")
+            print(f"ok: {key}: {got:.2f}x ({label} {base:.2f}x, floor {floor * base:.2f}x)")
     for key, hard in (baseline.get("absolute_floors") or {}).items():
         got = measured.get("speedups", {}).get(key)
         gated += 1
@@ -73,10 +85,75 @@ def check(measured: dict, baseline: dict, floor: float) -> list[str]:
         # A baseline with no recognizable ratios must not pass vacuously — a
         # schema rename or truncated file would otherwise green the gate forever.
         failures.append(
-            "baseline contains none of the gated ratios "
+            f"{label} contains none of the gated ratios "
             f"({', '.join(GATED)}) — gate checked nothing"
         )
     return failures
+
+
+def summary_table(
+    measured: dict,
+    baseline: dict,
+    floor: float,
+    trajectory: dict | None = None,
+    traj_floor: float | None = None,
+) -> str:
+    """The per-ratio markdown table for the Actions job summary.
+
+    One row per measured ratio: the baseline-gate and trajectory-floor
+    columns show ``value (>= floor)``; status is FAIL if ANY applicable check
+    (relative baseline, absolute floor, trajectory) fails, PASS if all hold,
+    and "info" for recorded-but-ungated ratios.
+    """
+    abs_floors = baseline.get("absolute_floors") or {}
+    base_sp = baseline.get("speedups", {})
+    traj_sp = (trajectory or {}).get("speedups", {})
+    keys = sorted(
+        set(measured.get("speedups", {}))
+        | (set(base_sp) & set(GATED))
+        | (set(traj_sp) & set(GATED))
+        | set(abs_floors)
+    )
+    lines = [
+        "### Bench gate: measured vs baseline vs trajectory",
+        "",
+        "| ratio | measured | baseline gate | abs floor | trajectory | status |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in keys:
+        got = measured.get("speedups", {}).get(key)
+        gated = key in GATED and key in base_sp
+        checks: list[bool] = []
+
+        def fmt(v):
+            return "—" if v is None else f"{v:.2f}x"
+
+        base_cell = "—"
+        if gated:
+            lim = floor * base_sp[key]
+            base_cell = f"{base_sp[key]:.2f}x (>= {lim:.2f}x)"
+            checks.append(got is not None and got >= lim)
+        abs_cell = "—"
+        if key in abs_floors:
+            abs_cell = f">= {abs_floors[key]:.2f}x"
+            checks.append(got is not None and got >= abs_floors[key])
+        traj_cell = "—"
+        # Mirrors check(measured, trajectory, ...): every GATED ratio the
+        # trajectory records is held, whether or not the baseline has caught
+        # up to it — the table must never show "info" on a row the gate fails.
+        if trajectory is not None and key in traj_sp and key in GATED:
+            lim = traj_floor * traj_sp[key]
+            traj_cell = f"{traj_sp[key]:.2f}x (>= {lim:.2f}x)"
+            checks.append(got is not None and got >= lim)
+        if not checks:
+            status = "info"
+        else:
+            status = "✅ pass" if all(checks) else "❌ FAIL"
+        lines.append(
+            f"| {key} | {fmt(got)} | {base_cell} | {abs_cell} | {traj_cell} | {status} |"
+        )
+    lines.append("")
+    return "\n".join(lines)
 
 
 def main() -> None:
@@ -85,6 +162,14 @@ def main() -> None:
     ap.add_argument("baseline", help="checked-in baseline JSON")
     ap.add_argument("--floor", type=float, default=0.7,
                     help="minimum allowed fraction of the baseline ratio")
+    ap.add_argument("--trajectory", metavar="PATH", default=None,
+                    help="also gate against this recorded-measurement JSON")
+    ap.add_argument("--trajectory-floor", type=float, default=0.42,
+                    help="minimum allowed fraction of each trajectory ratio")
+    ap.add_argument("--step-summary", metavar="PATH", nargs="?", const="",
+                    default=None,
+                    help="write the markdown ratio table to PATH "
+                         "(default: $GITHUB_STEP_SUMMARY, else stdout)")
     args = ap.parse_args()
 
     try:
@@ -92,11 +177,33 @@ def main() -> None:
             measured = json.load(f)
         with open(args.baseline) as f:
             baseline = json.load(f)
+        trajectory = None
+        if args.trajectory is not None:
+            with open(args.trajectory) as f:
+                trajectory = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         print(f"check_bench: cannot read inputs: {e}", file=sys.stderr)
         sys.exit(2)
 
     failures = check(measured, baseline, args.floor)
+    if trajectory is not None:
+        # The trajectory file records RAW idle ratios and carries no
+        # absolute_floors of its own — strip any so they are not double-gated.
+        traj = {"speedups": trajectory.get("speedups", {})}
+        failures += check(measured, traj, args.trajectory_floor, label="trajectory")
+
+    if args.step_summary is not None:
+        md = summary_table(
+            measured, baseline, args.floor,
+            trajectory=trajectory, traj_floor=args.trajectory_floor,
+        )
+        path = args.step_summary or os.environ.get("GITHUB_STEP_SUMMARY", "")
+        if path:
+            with open(path, "a") as f:
+                f.write(md + "\n")
+        else:
+            print(md)
+
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

@@ -26,7 +26,6 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
 
-from repro.core import theorem2_stepsize
 from repro.experiments import run_batch
 from repro.problems import make_a9a_like_problem
 
@@ -48,9 +47,10 @@ def _run_panel(prob, label: str, seeds: int, budget: int):
 
     runs = {}
     # SVRP through the engine's non-quadratic solver: guarded Newton prox,
-    # E[comm/iter] = 5 at p = 1/M.
+    # E[comm/iter] = 5 at p = 1/M; the Theorem-2 grid (eta = mu/(2 delta^2)
+    # at the MEASURED delta, p = 1/M) resolves from the core.theory table.
     runs["svrp"] = run_batch(
-        "svrp", prob, grid={"eta": theorem2_stepsize(mu, delta), "p": 1.0 / M},
+        "svrp", prob, stepsize="theory",
         num_steps=max(budget // 5, 200), prox_solver="newton", **common,
     )
     runs["svrg"] = run_batch(

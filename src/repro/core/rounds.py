@@ -500,7 +500,14 @@ def fused_oracle_kind(problem) -> str:
 def prox_gd_fused(problem, m, z, eta, L, prox_steps: int, interpret: bool):
     """The batched Algorithm-7 solve of one fused round: per-row sampled
     client ``m`` (R,), targets ``z`` (R, d), per-row eta/L scalars.  Rows are
-    trials for single-client rounds and trial x cohort pairs for minibatch."""
+    trials for single-client rounds and trial x cohort pairs for minibatch.
+
+    DP-ERM noise fold: a problem exposing ``dp_linear_term(m)`` (the
+    per-client objective-perturbation gradient shift s_m) solves
+    prox_{eta f^DP}(z) = prox_{eta f}(z - eta s_m) through the SAME kernel —
+    shifted target, unshifted start y0 = z, so the iterates match the
+    sequential registry solver's (whose oracle carries s_m additively).
+    The quadratic branch needs no fold: its noise rides ``problem.grad``."""
     from repro.core.prox import prox_gd_batched
 
     if fused_oracle_kind(problem) == "logistic":
@@ -508,8 +515,14 @@ def prox_gd_fused(problem, m, z, eta, L, prox_steps: int, interpret: bool):
 
         A = jnp.take(problem.Z, m, axis=0) * jnp.take(problem.y, m, axis=0)[:, :, None]
         beta = 1.0 / (L + 1.0 / eta)
+        y0 = None
+        z_solve = z
+        if hasattr(problem, "dp_linear_term"):
+            z_solve = z - eta[:, None] * problem.dp_linear_term(m)
+            y0 = z
         return logistic_prox_gd_batched(
-            A, z, beta, 1.0 / eta, problem.lam, prox_steps, interpret=interpret
+            A, z_solve, beta, 1.0 / eta, problem.lam, prox_steps,
+            y0=y0, interpret=interpret,
         )
     grad_b = jax.vmap(problem.grad)
     return prox_gd_batched(

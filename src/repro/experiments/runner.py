@@ -362,10 +362,49 @@ def _problem_dtype(problem):
     return None
 
 
-def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star):
+def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star,
+             stepsize=None, target_eps=1e-6, theory_constants=None):
     """Shared entry-point preamble: trial table, static config, validation,
-    and x0/x_star defaults — identical for run_batch and run_sequential so
-    the two can never drift apart."""
+    x0/x_star defaults, and theory-stepsize resolution — identical for
+    run_batch and run_sequential so the two can never drift apart."""
+    if x0 is None:
+        x0 = jnp.zeros(problem.dim, dtype=_problem_dtype(problem))
+    if x_star is None:
+        if spec.requires_x_star:
+            raise ValueError(
+                f"{algo}: pass x_star explicitly — problem.minimizer() is the "
+                "UNCONSTRAINED optimum, not this algorithm's reference point "
+                "(use e.g. composite_minimizer_pgd)"
+            )
+        if hasattr(problem, "privacy_spent"):
+            # DP-ERM validation: the wrapper's minimizer() is the PERTURBED
+            # optimum.  Utility (privacy-utility frontiers) must be measured
+            # against the base problem's minimizer; convergence studies may
+            # deliberately use the DP optimum — either way the choice has to
+            # be explicit, not an ambiguous default.
+            raise ValueError(
+                f"{algo}: DP problems need an explicit x_star — "
+                "problem.minimizer() is the NOISED optimum; pass "
+                "problem.base_problem().minimizer() to measure utility "
+                "against the non-private solution, or problem.minimizer() "
+                "to measure convergence of the private objective"
+            )
+        x_star = problem.minimizer()
+    if stepsize is not None:
+        if stepsize != "theory":
+            raise ValueError(
+                f"unknown stepsize mode {stepsize!r}; supported: 'theory' "
+                "(or pass explicit values in the grid)"
+            )
+        from repro.core.theory import theory_grid
+
+        # The caller's grid entries override the theorem-prescribed ones, so
+        # e.g. a refresh-probability sweep can ride the theory eta.  Passing
+        # theory_constants (a measured ProblemConstants) skips the per-call
+        # measurement — callers that also predict_comm measure exactly once.
+        grid = {**theory_grid(algo, problem, eps=target_eps, x0=x0,
+                              x_star=x_star, constants=theory_constants),
+                **(grid or {})}
     hparams, seed_arr = _build_trials(spec, algo, grid, seeds)
     cfg = _static_config(spec, algo, static)
     if spec.deterministic and np.unique(seed_arr).size > 1:
@@ -386,16 +425,6 @@ def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star
                 f"{algo}: prox_solver='gd' needs 'smoothness' in the grid "
                 "(Algorithm 7's stepsize is 1/(L + 1/eta); L=0 silently diverges)"
             )
-    if x0 is None:
-        x0 = jnp.zeros(problem.dim, dtype=_problem_dtype(problem))
-    if x_star is None:
-        if spec.requires_x_star:
-            raise ValueError(
-                f"{algo}: pass x_star explicitly — problem.minimizer() is the "
-                "UNCONSTRAINED optimum, not this algorithm's reference point "
-                "(use e.g. composite_minimizer_pgd)"
-            )
-        x_star = problem.minimizer()
     return hparams, seed_arr, cfg, x0, x_star
 
 
@@ -433,6 +462,9 @@ def run_batch(
     *,
     x0: jax.Array | None = None,
     x_star: jax.Array | None = None,
+    stepsize: str | None = None,
+    target_eps: float = 1e-6,
+    theory_constants=None,
     fused: bool = False,
     interpret: bool | None = None,
     shard: str | None = None,
@@ -446,6 +478,13 @@ def run_batch(
     cartesian-product style and the whole thing is crossed with the seed axis
     (seed-major).  Remaining kwargs are the algo's static config (num_steps,
     prox_solver, ...), shared by every trial.
+
+    `stepsize="theory"` resolves the grid from the paper's theorem table
+    (`repro.core.theory.theory_grid`): measured mu/delta/sigma_*^2 feed the
+    Theorem-1/2/3 stepsizes (`target_eps` sets the accuracy the Theorem-1
+    rule is calibrated to); explicit grid entries override the resolved ones,
+    and `theory_constants` (a `ProblemConstants`) skips the per-call
+    measurement when the caller already holds one.
 
     `fused=True` (fusable algos running Algorithm 7: svrp/sppm/
     svrp_minibatch/catalyzed_svrp with prox_solver="gd", and deep_svrp
@@ -469,7 +508,9 @@ def run_batch(
     """
     spec = _resolve(algo)
     hparams, seed_arr, cfg, x0, x_star = _prepare(
-        spec, algo, problem, grid, seeds, static, x0, x_star
+        spec, algo, problem, grid, seeds, static, x0, x_star,
+        stepsize=stepsize, target_eps=target_eps,
+        theory_constants=theory_constants,
     )
 
     hp = spec.params_cls(**_device_hparams(hparams))
@@ -524,6 +565,9 @@ def run_sequential(
     *,
     x0: jax.Array | None = None,
     x_star: jax.Array | None = None,
+    stepsize: str | None = None,
+    target_eps: float = 1e-6,
+    theory_constants=None,
     **static,
 ) -> BatchResult:
     """The per-trial Python loop `run_batch` replaces.
@@ -534,7 +578,9 @@ def run_sequential(
     """
     spec = _resolve(algo)
     hparams, seed_arr, cfg, x0, x_star = _prepare(
-        spec, algo, problem, grid, seeds, static, x0, x_star
+        spec, algo, problem, grid, seeds, static, x0, x_star,
+        stepsize=stepsize, target_eps=target_eps,
+        theory_constants=theory_constants,
     )
 
     single = _single_runner(spec.scan_fn, tuple(sorted(cfg.items())))

@@ -41,9 +41,10 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
-def _logistic_prox_kernel(a_ref, z_ref, s_ref, o_ref, *, num_steps: int):
+def _logistic_prox_kernel(a_ref, z_ref, x0_ref, s_ref, o_ref, *, num_steps: int):
     A = a_ref[0]  # (n_pad, d_pad) — this trial's label-signed features
     z = z_ref[...]  # (1, d_pad) prox target
+    x0 = x0_ref[...]  # (1, d_pad) GD start (== z except for the DP noise fold)
     beta = s_ref[0, 0]
     inv_eta = s_ref[0, 1]
     lam = s_ref[0, 2]
@@ -56,7 +57,7 @@ def _logistic_prox_kernel(a_ref, z_ref, s_ref, o_ref, *, num_steps: int):
         g = -inv_n * jnp.dot(u, A) + lam * x
         return x - beta * (g + (x - z) * inv_eta)
 
-    o_ref[...] = jax.lax.fori_loop(0, num_steps, gd_step, z)
+    o_ref[...] = jax.lax.fori_loop(0, num_steps, gd_step, x0)
 
 
 @functools.partial(jax.jit, static_argnames=("num_steps", "interpret"))
@@ -68,14 +69,19 @@ def logistic_prox_gd_batched(
     lam: float,
     num_steps: int,
     *,
+    y0: jax.Array | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     """`num_steps` of Algorithm 7 on the `(B, n, d)` logistic oracle, one launch.
 
-    Returns the `(B, d)` approximate prox points (started from `z`, exactly
-    like `core.prox.prox_gd`'s default).  `lam` is the problem's shared l2
-    coefficient; the 1/n gradient normalization uses the TRUE row count `n`
-    (row padding to the sublane multiple is free by the sign-folding above).
+    Returns the `(B, d)` approximate prox points (started from `y0`, which
+    defaults to `z` exactly like `core.prox.prox_gd`).  A separate start point
+    is what lets the DP-ERM fused path reuse this kernel unchanged: the linear
+    noise term folds into a SHIFTED target z' = z - eta s while the iteration
+    still starts at the unshifted z (`rounds.prox_gd_fused`).  `lam` is the
+    problem's shared l2 coefficient; the 1/n gradient normalization uses the
+    TRUE row count `n` (row padding to the sublane multiple is free by the
+    sign-folding above).
     """
     B, n, d = A.shape
     dtype = A.dtype
@@ -84,6 +90,7 @@ def logistic_prox_gd_batched(
 
     A_p = jnp.pad(A, ((0, 0), (0, n_pad - n), (0, d_pad - d)))
     z_p = jnp.pad(z.astype(dtype), ((0, 0), (0, d_pad - d)))
+    x0_p = z_p if y0 is None else jnp.pad(y0.astype(dtype), ((0, 0), (0, d_pad - d)))
     scalars = jnp.stack(
         [
             jnp.broadcast_to(jnp.asarray(beta, dtype), (B,)),
@@ -100,10 +107,11 @@ def logistic_prox_gd_batched(
         in_specs=[
             pl.BlockSpec((1, n_pad, d_pad), lambda b: (b, 0, 0)),
             pl.BlockSpec((1, d_pad), lambda b: (b, 0)),
+            pl.BlockSpec((1, d_pad), lambda b: (b, 0)),
             pl.BlockSpec((1, 4), lambda b: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, d_pad), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, d_pad), dtype),
         interpret=interpret,
-    )(A_p, z_p, scalars)
+    )(A_p, z_p, x0_p, scalars)
     return out[:, :d]

@@ -130,14 +130,15 @@ def prox_update(y, g, z, local_lr, inv_eta):
     return y - local_lr * (g + (y - z) * inv_eta)
 
 
-def logistic_prox_gd_batched(A, z, beta, inv_eta, lam, num_steps):
+def logistic_prox_gd_batched(A, z, beta, inv_eta, lam, num_steps, y0=None):
     """Algorithm 7 on the (B, n, d) logistic oracle.  Oracle.
 
     A = y[:, None] * Z (label-signed client rows per trial); per GD step
 
         t = A x;  g = -A' sigmoid(-t)/n + lam x;  x <- x - beta (g + (x-z)/eta)
 
-    started from x0 = z, matching `core.prox.prox_gd`'s default.
+    started from x0 = y0 (default z, matching `core.prox.prox_gd`; the DP
+    noise fold passes a start point distinct from the shifted target).
     """
     B, n, _ = A.shape
     beta = jnp.broadcast_to(jnp.asarray(beta, z.dtype), (B,))
@@ -149,7 +150,7 @@ def logistic_prox_gd_batched(A, z, beta, inv_eta, lam, num_steps):
         g = -jnp.einsum("bn,bnd->bd", u, A) / n + lam * x
         return x - beta[:, None] * (g + (x - z) * inv_eta[:, None])
 
-    return jax.lax.fori_loop(0, num_steps, body, z)
+    return jax.lax.fori_loop(0, num_steps, body, z if y0 is None else y0)
 
 
 def prox_update_batched(y, g, z, local_lr, inv_eta):

@@ -1,5 +1,15 @@
 from repro.problems.quadratic import QuadraticProblem, make_synthetic_quadratic, make_ridge_problem
 from repro.problems.logistic import LogisticProblem, make_a9a_like_problem
+from repro.problems.dp_erm import (
+    DPLogisticProblem,
+    DPQuadraticProblem,
+    clip_rows,
+    make_dp_a9a_problem,
+    make_dp_logistic,
+    make_dp_quadratic,
+    privacy_spent,
+    zcdp_to_eps,
+)
 
 __all__ = [
     "QuadraticProblem",
@@ -7,4 +17,12 @@ __all__ = [
     "make_ridge_problem",
     "LogisticProblem",
     "make_a9a_like_problem",
+    "DPLogisticProblem",
+    "DPQuadraticProblem",
+    "clip_rows",
+    "make_dp_a9a_problem",
+    "make_dp_logistic",
+    "make_dp_quadratic",
+    "privacy_spent",
+    "zcdp_to_eps",
 ]

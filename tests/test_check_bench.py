@@ -1,0 +1,197 @@
+"""benchmarks/check_bench.py gates every PR (bench job) but had no tests of
+its own: missing-ratio keys, absolute_floors, the zero-recognizable-ratios
+loud-failure path, trajectory-floor arithmetic, and the step-summary table."""
+import json
+import subprocess
+import sys
+
+from benchmarks.check_bench import GATED, check, summary_table
+
+
+def _measured(**overrides):
+    sp = {
+        "batch_spectral_vs_loop_exact": 20.0,
+        "batch_spectral_vs_loop_spectral": 12.0,
+        "batch_exact_vs_loop_exact": 2.2,
+        "logistic_batch_newton_cg_vs_loop_fixed": 16.0,
+        "logistic_batch_newton_cg_vs_loop_exact": 2.8,
+        "logistic_early_exit_vs_fixed": 6.0,
+        "logistic_svrp_batch_gd_vs_loop": 1.3,
+        "logistic_svrp_batch_newton_cg_vs_loop": 1.1,
+        "minibatch_fused_vs_loop": 0.03,  # recorded but ungated
+    }
+    sp.update(overrides)
+    return {"speedups": sp}
+
+
+def _baseline(**extra):
+    base = {
+        "speedups": {
+            "batch_spectral_vs_loop_exact": 14.0,
+            "logistic_svrp_batch_gd_vs_loop": 1.0,
+        },
+        "absolute_floors": {"logistic_svrp_batch_gd_vs_loop": 1.0},
+    }
+    base.update(extra)
+    return base
+
+
+def test_all_within_floor_passes():
+    assert check(_measured(), _baseline(), 0.7) == []
+
+
+def test_relative_floor_arithmetic():
+    """A ratio at exactly floor*baseline passes; just below fails."""
+    base = _baseline()
+    ok = _measured(batch_spectral_vs_loop_exact=0.7 * 14.0)
+    assert check(ok, base, 0.7) == []
+    bad = _measured(batch_spectral_vs_loop_exact=0.7 * 14.0 - 1e-6)
+    failures = check(bad, base, 0.7)
+    assert len(failures) == 1 and "batch_spectral_vs_loop_exact" in failures[0]
+
+
+def test_missing_ratio_key_fails_loudly():
+    measured = _measured()
+    del measured["speedups"]["batch_spectral_vs_loop_exact"]
+    failures = check(measured, _baseline(), 0.7)
+    assert any("missing from measured" in f for f in failures)
+
+
+def test_absolute_floor_violation():
+    """The caveat-track >= 1x acceptance line trips regardless of how lenient
+    the relative floor is."""
+    bad = _measured(logistic_svrp_batch_gd_vs_loop=0.9)
+    failures = check(bad, _baseline(), floor=0.1)
+    assert any("absolute floor" in f for f in failures)
+
+
+def test_absolute_floor_missing_key_fails():
+    base = _baseline()
+    base["absolute_floors"] = {"some_future_ratio": 2.0}
+    failures = check(_measured(), base, 0.7)
+    assert any("some_future_ratio" in f and "missing" in f for f in failures)
+
+
+def test_zero_recognizable_ratios_fails_not_passes():
+    """A renamed/truncated baseline must fail loudly, never green vacuously."""
+    failures = check(_measured(), {"speedups": {"renamed_ratio": 1.0}}, 0.7)
+    assert len(failures) == 1
+    assert "gate checked nothing" in failures[0]
+
+
+def test_unknown_baseline_ratios_ignored():
+    base = _baseline()
+    base["speedups"]["not_a_gated_ratio"] = 99.0
+    assert check(_measured(), base, 0.7) == []
+
+
+def test_trajectory_floor_arithmetic():
+    """The trajectory gate is the same check at its own floor: 0.42x of the
+    recorded raw ratio passes, below fails."""
+    traj = {"speedups": {"batch_spectral_vs_loop_exact": 21.4}}
+    ok = _measured(batch_spectral_vs_loop_exact=0.42 * 21.4)
+    assert check(ok, traj, 0.42, label="trajectory") == []
+    bad = _measured(batch_spectral_vs_loop_exact=0.42 * 21.4 - 1e-6)
+    failures = check(bad, traj, 0.42, label="trajectory")
+    assert len(failures) == 1 and "trajectory 21.40x" in failures[0]
+
+
+# ------------------------------------------------------------- summary table
+def test_summary_table_rows_and_status():
+    traj = {"speedups": {"batch_spectral_vs_loop_exact": 21.4}}
+    md = summary_table(
+        _measured(batch_spectral_vs_loop_exact=5.0), _baseline(), 0.7,
+        trajectory=traj, traj_floor=0.42,
+    )
+    lines = {ln.split("|")[1].strip(): ln for ln in md.splitlines() if ln.startswith("| ")}
+    # 5.0 < 0.7*14.0: baseline gate fails -> FAIL row
+    assert "❌ FAIL" in lines["batch_spectral_vs_loop_exact"]
+    # trajectory column carries the floor arithmetic
+    assert f"(>= {0.42 * 21.4:.2f}x)" in lines["batch_spectral_vs_loop_exact"]
+    # gated + absolute floor, all passing
+    assert "✅ pass" in lines["logistic_svrp_batch_gd_vs_loop"]
+    assert ">= 1.00x" in lines["logistic_svrp_batch_gd_vs_loop"]
+    # recorded-but-ungated ratio renders as info, not pass/fail
+    assert "info" in lines["minibatch_fused_vs_loop"]
+
+
+def test_summary_table_tracks_trajectory_only_ratios():
+    """A GATED ratio recorded in the trajectory but not yet in the baseline is
+    still gated by check(); the table must show the same FAIL, not 'info'."""
+    traj = {"speedups": {"logistic_early_exit_vs_fixed": 6.0}}
+    baseline = {"speedups": {"batch_spectral_vs_loop_exact": 14.0}}
+    measured = _measured(logistic_early_exit_vs_fixed=0.42 * 6.0 - 1e-6)
+    assert check(measured, traj, 0.42, label="trajectory")  # the gate fails...
+    md = summary_table(measured, baseline, 0.7, trajectory=traj, traj_floor=0.42)
+    row = next(ln for ln in md.splitlines()
+               if ln.startswith("| logistic_early_exit_vs_fixed "))
+    assert "❌ FAIL" in row  # ...and the table says so, baseline column or not
+
+
+def test_summary_table_without_trajectory():
+    md = summary_table(_measured(), _baseline(), 0.7)
+    assert "### Bench gate" in md
+    assert "❌" not in md
+
+
+# ---------------------------------------------------------------- CLI surface
+def _run_cli(tmp_path, measured, baseline, *extra):
+    mp, bp = tmp_path / "m.json", tmp_path / "b.json"
+    mp.write_text(json.dumps(measured))
+    bp.write_text(json.dumps(baseline))
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_bench", str(mp), str(bp), *extra],
+        capture_output=True, text=True,
+    )
+
+
+def test_cli_exit_codes(tmp_path):
+    ok = _run_cli(tmp_path, _measured(), _baseline())
+    assert ok.returncode == 0, ok.stderr
+    bad = _run_cli(tmp_path, _measured(logistic_svrp_batch_gd_vs_loop=0.5),
+                   _baseline())
+    assert bad.returncode == 1
+    assert "REGRESSION" in bad.stderr
+
+
+def test_cli_trajectory_and_step_summary(tmp_path):
+    traj = tmp_path / "traj.json"
+    traj.write_text(json.dumps({"speedups": {"batch_spectral_vs_loop_exact": 21.4}}))
+    summary = tmp_path / "summary.md"
+    res = _run_cli(
+        tmp_path, _measured(), _baseline(),
+        "--trajectory", str(traj), "--trajectory-floor", "0.42",
+        "--step-summary", str(summary),
+    )
+    assert res.returncode == 0, res.stderr
+    md = summary.read_text()
+    assert "| ratio | measured |" in md
+    assert "batch_spectral_vs_loop_exact" in md
+    # trajectory regression makes the CLI fail even when the baseline passes
+    res2 = _run_cli(
+        tmp_path, _measured(batch_spectral_vs_loop_exact=12.0), _baseline(),
+        "--floor", "0.5",
+        "--trajectory", str(traj), "--trajectory-floor", "0.9",
+    )
+    assert res2.returncode == 1
+    assert "trajectory" in res2.stderr
+
+
+def test_cli_malformed_input_exit_2(tmp_path):
+    mp = tmp_path / "m.json"
+    mp.write_text("{not json")
+    bp = tmp_path / "b.json"
+    bp.write_text("{}")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_bench", str(mp), str(bp)],
+        capture_output=True, text=True,
+    )
+    assert res.returncode == 2
+
+
+def test_gated_tuple_matches_recorded_baseline():
+    """Every gated ratio exists in the checked-in baseline, so the real gate
+    never silently skips one (a rename would otherwise un-gate a ratio)."""
+    with open("benchmarks/BENCH_sweep_baseline.json") as f:
+        baseline = json.load(f)
+    assert set(GATED) <= set(baseline["speedups"])

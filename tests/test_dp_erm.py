@@ -1,0 +1,213 @@
+"""DP-ERM workload: accountant closed forms, clip-composed similarity bound
+(cross-validated against `core.similarity.empirical_delta`), and the noised
+oracles through the experiment engine."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import empirical_delta
+from repro.experiments import run_batch
+from repro.problems import (
+    clip_rows,
+    make_a9a_like_problem,
+    make_dp_logistic,
+    make_dp_quadratic,
+    make_synthetic_quadratic,
+    privacy_spent,
+    zcdp_to_eps,
+)
+
+
+@pytest.fixture(scope="module")
+def base_quad():
+    return make_synthetic_quadratic(num_clients=8, dim=6, mu=1.0, L=50.0,
+                                    delta=3.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def dp_quad(base_quad):
+    return make_dp_quadratic(base_quad, jax.random.key(7), sigma=2.0, clip=1.0,
+                             n_per_client=100)
+
+
+@pytest.fixture(scope="module")
+def base_logistic():
+    return make_a9a_like_problem(num_clients=6, n_per_client=60, n_pool=600,
+                                 dim=24, seed=0)
+
+
+@pytest.fixture(scope="module")
+def dp_logistic(base_logistic):
+    return make_dp_logistic(base_logistic, jax.random.key(3), sigma=1.0, clip=1.0)
+
+
+# ------------------------------------------------------------------ accountant
+def test_accountant_matches_closed_form_zcdp_composition():
+    """privacy_spent IS the linear zCDP composition: rho = steps p / (2 sigma^2),
+    eps = rho + 2 sqrt(rho ln(1/delta)) — checked against the hand formula."""
+    steps, p, sigma, delta = 1000, 0.1, 2.0, 1e-5
+    eps, d = privacy_spent(steps, p, sigma, target_delta=delta)
+    rho = steps * p / (2.0 * sigma**2)
+    assert d == delta
+    assert eps == pytest.approx(rho + 2.0 * math.sqrt(rho * math.log(1.0 / delta)))
+    assert zcdp_to_eps(rho, delta) == eps
+
+
+def test_accountant_monotonicity():
+    eps_base, _ = privacy_spent(1000, 0.1, 2.0)
+    assert privacy_spent(2000, 0.1, 2.0)[0] > eps_base  # more rounds cost more
+    assert privacy_spent(1000, 0.2, 2.0)[0] > eps_base  # more participation too
+    assert privacy_spent(1000, 0.1, 4.0)[0] < eps_base  # more noise costs less
+    # Composition is exactly linear in rho: 4x the noise multiplier = 1/16 rho.
+    eps_4s, _ = privacy_spent(1000, 0.1, 8.0)
+    rho = 1000 * 0.1 / (2.0 * 8.0**2)
+    assert eps_4s == pytest.approx(zcdp_to_eps(rho, 1e-5))
+
+
+def test_accountant_edge_cases():
+    assert privacy_spent(0, 0.1, 1.0)[0] == 0.0
+    assert privacy_spent(100, 0.1, 0.0)[0] == math.inf  # no noise, no privacy
+    with pytest.raises(ValueError):
+        privacy_spent(100, 1.5, 1.0)
+    with pytest.raises(ValueError):
+        privacy_spent(100, 0.1, -1.0)
+
+
+def test_problem_accountant_uses_its_sigma(dp_quad, dp_logistic):
+    for prob in (dp_quad, dp_logistic):
+        eps, d = prob.privacy_spent(500, 0.125)
+        assert (eps, d) == privacy_spent(500, 0.125, prob.dp_sigma)
+
+
+# ------------------------------------------------- similarity: preserved+bound
+def test_linear_perturbation_preserves_exact_similarity(base_quad, dp_quad):
+    """The objective perturbation is linear, so A (and delta) are untouched."""
+    np.testing.assert_array_equal(np.asarray(base_quad.A), np.asarray(dp_quad.A))
+    assert float(dp_quad.similarity()) == float(base_quad.similarity())
+
+
+def test_empirical_delta_invariant_under_noise(base_logistic):
+    """Assumption 1's defining ratio uses gradient-deviation DIFFERENCES, so
+    the constant per-client shift cancels: empirical_delta(dp) == base's
+    (cross-validation of similarity_bound's object against core.similarity)."""
+    key = jax.random.key(0)
+    clipped = make_dp_logistic(base_logistic, jax.random.key(3), sigma=0.0, clip=1.0)
+    noised = make_dp_logistic(base_logistic, jax.random.key(3), sigma=4.0, clip=1.0)
+    d_clip = float(empirical_delta(clipped, key, num_pairs=16))
+    d_noise = float(empirical_delta(noised, key, num_pairs=16))
+    assert d_noise == pytest.approx(d_clip, rel=1e-10)
+
+
+def test_similarity_bound_dominates_measured_delta(dp_logistic):
+    """The clip-composed concentration bound upper-bounds both the measured
+    Hessian similarity at the optimum and the Monte-Carlo empirical delta."""
+    bound = dp_logistic.similarity_bound()
+    measured = float(dp_logistic.similarity_at(dp_logistic.minimizer()))
+    mc = float(empirical_delta(dp_logistic, jax.random.key(1), num_pairs=16))
+    assert measured <= bound
+    assert mc <= bound
+
+
+def test_similarity_bound_scales_one_over_sqrt_n(base_logistic):
+    """delta ~ O(1/sqrt(n)): quadrupling the per-client sample count halves
+    the bound (the paper's DP-ERM regime)."""
+    key = jax.random.key(3)
+    small = make_dp_logistic(base_logistic, key, sigma=1.0, clip=1.0)
+    big_base = make_a9a_like_problem(num_clients=6, n_per_client=240,
+                                     n_pool=600, dim=24, seed=0)
+    big = make_dp_logistic(big_base, key, sigma=1.0, clip=1.0)
+    assert big.similarity_bound() == pytest.approx(small.similarity_bound() / 2.0)
+
+
+# ----------------------------------------------------------------- clipping
+def test_feature_rows_clipped(dp_logistic):
+    norms = np.linalg.norm(np.asarray(dp_logistic.Z), axis=-1)
+    assert norms.max() <= 1.0 + 1e-12
+
+
+def test_clip_rows_leaves_small_rows_untouched():
+    Z = jnp.asarray([[0.3, 0.4], [3.0, 4.0]])
+    out = np.asarray(clip_rows(Z, 1.0))
+    np.testing.assert_array_equal(out[0], np.asarray(Z[0]))  # inside: bitwise
+    assert np.linalg.norm(out[1]) == pytest.approx(1.0)
+
+
+# ------------------------------------------------------------- noised oracles
+def test_noise_actually_perturbs_gradients(base_quad, dp_quad):
+    x = jnp.ones(base_quad.dim)
+    g_base = base_quad.grad(jnp.asarray(0), x)
+    g_dp = dp_quad.grad(jnp.asarray(0), x)
+    shift = np.asarray(g_dp - g_base)
+    np.testing.assert_allclose(shift, np.asarray(dp_quad.dp_shift[0]), atol=1e-12)
+    assert np.linalg.norm(shift) > 0
+
+
+def test_logistic_oracles_carry_the_shift(dp_logistic):
+    m = jnp.asarray(2)
+    x = 0.1 * jnp.ones(dp_logistic.dim)
+    s = np.asarray(dp_logistic.dp_shift[2])
+    base = dp_logistic.base_problem()
+    np.testing.assert_allclose(
+        np.asarray(dp_logistic.grad(m, x) - base.grad(m, x)), s, atol=1e-12
+    )
+    grad_fn, _ = dp_logistic.local_oracle(m)
+    g0, _ = base.local_oracle(m)
+    np.testing.assert_allclose(np.asarray(grad_fn(x) - g0(x)), s, atol=1e-12)
+    np.testing.assert_allclose(
+        np.asarray(dp_logistic.full_grad(x) - base.full_grad(x)),
+        np.asarray(jnp.mean(dp_logistic.dp_shift, axis=0)), atol=1e-12,
+    )
+    # Hessians are untouched (linear term).
+    np.testing.assert_array_equal(
+        np.asarray(dp_logistic.hessian(m, x)), np.asarray(base.hessian(m, x))
+    )
+
+
+def test_dp_minimizer_solves_the_private_objective(dp_logistic):
+    x_dp = dp_logistic.minimizer()
+    assert float(jnp.linalg.norm(dp_logistic.full_grad(x_dp))) < 1e-8
+    # ... and differs from the non-private optimum (the utility price).
+    x_base = dp_logistic.base_problem().minimizer()
+    assert float(jnp.sum((x_dp - x_base) ** 2)) > 0
+
+
+def test_utility_degrades_with_sigma(base_logistic):
+    """More noise moves the private optimum further from the non-private one
+    (the frontier benchmark's monotone axis)."""
+    key = jax.random.key(3)
+    Z_clipped = clip_rows(base_logistic.Z, 1.0)  # clipping is sigma-independent
+    dists = []
+    for sigma in (0.5, 4.0, 32.0):
+        dp = make_dp_logistic(base_logistic, key, sigma=sigma, clip=1.0)
+        np.testing.assert_array_equal(np.asarray(dp.Z), np.asarray(Z_clipped))
+        x_b = dp.base_problem().minimizer()
+        dists.append(float(jnp.sum((dp.minimizer() - x_b) ** 2)))
+    assert dists[0] < dists[1] < dists[2]
+
+
+# ------------------------------------------------------------------ engine
+def test_run_batch_requires_explicit_x_star(dp_quad):
+    with pytest.raises(ValueError, match="DP problems need an explicit x_star"):
+        run_batch("svrp", dp_quad, grid={"eta": 0.05, "p": 0.2}, num_steps=5)
+
+
+def test_dp_svrp_converges_to_private_optimum(dp_quad):
+    res = run_batch(
+        "svrp", dp_quad, stepsize="theory", seeds=3, num_steps=400,
+        x_star=dp_quad.minimizer(),
+    )
+    assert float(np.median(np.asarray(res.dist_sq)[:, -1])) < 1e-10
+
+
+def test_dp_catalyzed_inherits_noise_through_shifted(dp_quad):
+    """Catalyst builds shifted subproblems from the DP problem; the noise must
+    ride along (the shifted b embeds the perturbed b)."""
+    res = run_batch(
+        "catalyzed_svrp", dp_quad, stepsize="theory", seeds=2,
+        num_outer=4, inner_steps=30, x_star=dp_quad.minimizer(),
+    )
+    d2 = np.asarray(res.dist_sq)
+    assert float(np.median(d2[:, -1])) < 1e-8

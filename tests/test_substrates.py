@@ -21,6 +21,7 @@ devices, so the shard="data" cases exercise real pad+mask blocks, not just
 the degenerate single-device mesh.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -32,7 +33,12 @@ from repro.core import (
     theorem3_gamma,
 )
 from repro.experiments import ALGOS, run_batch, run_sequential
-from repro.problems import make_synthetic_quadratic
+from repro.problems import (
+    make_a9a_like_problem,
+    make_dp_logistic,
+    make_dp_quadratic,
+    make_synthetic_quadratic,
+)
 
 M = 10
 SEEDS = 2
@@ -237,6 +243,129 @@ def test_catalyzed_comm_restarts_inner_accounting(prob, cases):
     # first step of stage 2 = last comm of stage 1 + anchor re-init + round
     boundary = comm[:, inner] - comm[:, inner - 1]
     assert set(np.unique(boundary)) <= {3 * M + 2, 6 * M + 2}
+
+
+# -------------------------------------------------- DP-ERM problem case table
+# The substrate contract extends to the DP workload: the clipped-and-noised
+# oracles (problems/dp_erm.py) must produce the SAME trajectories on every
+# substrate INCLUDING the noise draws (the per-client noise table is problem
+# data drawn once from a PRNG key, so sequential / batched / fused consume it
+# bit-identically), with integer-exact communication parity.  The DP logistic
+# fused case additionally exercises the noise FOLD (shifted prox target +
+# unshifted start through the unchanged Pallas kernel).
+
+DP_M = 6
+
+
+@pytest.fixture(scope="module")
+def dp_quad_prob():
+    base = make_synthetic_quadratic(num_clients=DP_M, dim=6, mu=1.0, L=60.0,
+                                    delta=4.0, seed=2)
+    return make_dp_quadratic(base, jax.random.key(11), sigma=2.0, clip=1.0,
+                             n_per_client=50)
+
+
+@pytest.fixture(scope="module")
+def dp_logistic_prob():
+    base = make_a9a_like_problem(num_clients=DP_M, n_per_client=30,
+                                 n_pool=300, dim=16, seed=2)
+    return make_dp_logistic(base, jax.random.key(12), sigma=2.0, clip=1.0)
+
+
+@pytest.fixture(scope="module")
+def dp_cases(dp_quad_prob, dp_logistic_prob):
+    """(problem, run_batch kwargs, fused-variant kwargs) per (algo, problem)."""
+    Lq = float(dp_quad_prob.smoothness_max())
+    Ll = float(dp_logistic_prob.smoothness_max())
+    xq = dp_quad_prob.minimizer()
+    xl = dp_logistic_prob.minimizer()
+    gd = {"prox_solver": "gd", "prox_steps": 15}
+    return {
+        "sppm-dp_quadratic": (
+            dp_quad_prob,
+            dict(grid={"eta": [0.05, 0.1]}, seeds=SEEDS, num_steps=40, x_star=xq),
+            dict(grid={"eta": [0.05, 0.1], "smoothness": Lq}, seeds=SEEDS,
+                 num_steps=40, x_star=xq, **gd),
+        ),
+        "svrp-dp_quadratic": (
+            dp_quad_prob,
+            dict(grid={"eta": [0.05, 0.1], "p": 0.25}, seeds=SEEDS,
+                 num_steps=40, x_star=xq),
+            dict(grid={"eta": [0.05, 0.1], "p": 0.25, "smoothness": Lq},
+                 seeds=SEEDS, num_steps=40, x_star=xq, **gd),
+        ),
+        "svrp_minibatch-dp_quadratic": (
+            dp_quad_prob,
+            dict(grid={"eta": 0.15, "p": 0.25}, seeds=SEEDS, num_steps=30,
+                 batch_clients=3, x_star=xq),
+            dict(grid={"eta": 0.15, "p": 0.25, "smoothness": Lq}, seeds=SEEDS,
+                 num_steps=30, batch_clients=3, x_star=xq, **gd),
+        ),
+        "sppm-dp_logistic": (
+            dp_logistic_prob,
+            dict(grid={"eta": [0.5, 1.0]}, seeds=SEEDS, num_steps=25,
+                 prox_solver="newton-cg", x_star=xl),
+            dict(grid={"eta": [0.5, 1.0], "smoothness": Ll}, seeds=SEEDS,
+                 num_steps=25, x_star=xl, **gd),
+        ),
+        "svrp-dp_logistic": (
+            dp_logistic_prob,
+            dict(grid={"eta": [0.5, 1.0], "p": 0.3}, seeds=SEEDS, num_steps=25,
+                 prox_solver="newton-cg", x_star=xl),
+            dict(grid={"eta": [0.5, 1.0], "p": 0.3, "smoothness": Ll},
+                 seeds=SEEDS, num_steps=25, x_star=xl, **gd),
+        ),
+    }
+
+
+@pytest.mark.parametrize("case", [
+    "sppm-dp_quadratic", "svrp-dp_quadratic", "svrp_minibatch-dp_quadratic",
+    "sppm-dp_logistic", "svrp-dp_logistic",
+])
+def test_dp_sequential_matches_vmapped(case, dp_cases):
+    prob, kw, _ = dp_cases[case]
+    algo = case.split("-")[0]
+    _check(run_sequential(algo, prob, **kw), run_batch(algo, prob, **kw))
+
+
+@pytest.mark.parametrize("case", [
+    "sppm-dp_quadratic", "svrp-dp_quadratic", "svrp_minibatch-dp_quadratic",
+    "sppm-dp_logistic", "svrp-dp_logistic",
+])
+def test_dp_sequential_matches_fused(case, dp_cases):
+    """Fused Pallas substrate on DP problems: the quadratic oracle reads the
+    noise through grad/b; the logistic oracle exercises the z-shift fold."""
+    prob, _, kw = dp_cases[case]
+    algo = case.split("-")[0]
+    seq = run_sequential(algo, prob, **kw)
+    fus = run_batch(algo, prob, fused=True, **kw)
+    _check(seq, fus)
+    np.testing.assert_array_equal(np.asarray(seq.comm), np.asarray(fus.comm))
+    assert seq.comm.dtype == fus.comm.dtype
+
+
+def test_dp_noise_draws_identical_across_substrates(dp_logistic_prob, dp_cases):
+    """The noise is problem data (one PRNG draw at construction), so substrate
+    equivalence holds INCLUDING the draws: zeroing the noise changes every
+    substrate's trajectory by the same displacement — i.e. the three
+    executions see the same noise, not merely noise of the same law."""
+    _, kw, _ = dp_cases["svrp-dp_logistic"]
+    import dataclasses as dc
+
+    noiseless = dc.replace(
+        dp_logistic_prob, dp_shift=jnp.zeros_like(dp_logistic_prob.dp_shift)
+    )
+    seq_dp = run_sequential("svrp", dp_logistic_prob, **kw)
+    bat_dp = run_batch("svrp", dp_logistic_prob, **kw)
+    kw0 = dict(kw, x_star=noiseless.minimizer())
+    seq_0 = run_sequential("svrp", noiseless, **kw0)
+    # noise moves the sequential trajectory ...
+    assert float(np.max(np.abs(np.asarray(seq_dp.x_final)
+                               - np.asarray(seq_0.x_final)))) > 0
+    # ... and the batched run lands on the sequential DP iterates, not the
+    # noiseless ones: same draws, not just same distribution.
+    np.testing.assert_allclose(np.asarray(bat_dp.x_final),
+                               np.asarray(seq_dp.x_final), rtol=1e-5, atol=1e-12)
 
 
 # ------------------------------------------------------------- error paths
