@@ -47,6 +47,10 @@ GATED = (
     # carries an absolute >= 1x floor in the baseline (the acceptance line).
     "logistic_svrp_batch_gd_vs_loop",
     "logistic_svrp_batch_newton_cg_vs_loop",
+    # Online round engine: incremental session stepping vs the fused scan on
+    # the quadratic headline; also carries an absolute >= 0.7x floor in the
+    # baseline (the acceptance line for the session layer).
+    "session_step_vs_scan",
 )
 # NOT gated: minibatch_fused_vs_loop (interpret-mode Pallas on CPU is an
 # emulation, not the compiled kernel; recorded for the trajectory only) and

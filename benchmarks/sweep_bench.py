@@ -57,6 +57,13 @@ a step in one batched Pallas launch per GD step, interpret mode on CPU):
 `minibatch_fused_vs_loop` — informational on CPU (interpret-mode kernel
 emulation dominates; the compiled-kernel win is a real-TPU item).
 
+Online-round-engine timing (`session/spectral`): the quadratic headline sweep
+stepped 50 rounds at a time through `repro.serve.open_session` instead of one
+fused scan, recorded as `session_step_vs_scan`.  Acceptance: >= 0.7x absolute
+(encoded in the baseline's `absolute_floors`) — incremental stepping may cost
+at most 30% of the scan's throughput, so early stopping and online serving
+never mean abandoning the engine's speed.
+
 CLI (the CI bench job's entry point):
 
     python -m benchmarks.sweep_bench --json BENCH_sweep.json [--full]
@@ -81,6 +88,7 @@ from repro.core import theorem2_stepsize
 from repro.core.prox import PROX_SOLVERS, ProxSolver
 from repro.experiments import run_batch, run_sequential
 from repro.problems import make_a9a_like_problem, make_synthetic_quadratic
+from repro.serve import open_session
 
 
 def _register_legacy_newton() -> None:
@@ -202,6 +210,21 @@ def run_structured(quick: bool = False) -> dict:
             prox_solver="spectral",
         ).dist_sq,
     }
+
+    # Incremental-session timing: the SAME sweep stepped 100 rounds at a time
+    # through `open_session` (the online round engine) instead of one fused
+    # lax.scan.  Measures the overhead of holding the sweep open — per-chunk
+    # dispatch, host-side chunk stitching — against the scan it must match.
+    def _session_spectral():
+        sess = open_session(
+            "svrp", prob, grid=grid, seeds=n_seeds, num_steps=num_steps,
+            prox_solver="spectral",
+        )
+        while sess.t < sess.horizon:
+            sess.step(min(100, sess.horizon - sess.t))
+        return sess.dist_sq
+
+    variants["session/spectral"] = _session_spectral
     # Fused-substrate timing: minibatch SVRP, every cohort prox of every
     # trial through one batched Pallas launch per GD step (interpret on CPU).
     L = float(prob.smoothness_max())
@@ -263,6 +286,13 @@ def run_structured(quick: bool = False) -> dict:
         "minibatch_fused_vs_loop": (
             warm_us["minibatch_loop/gd"] / warm_us["minibatch_fused/gd"]
         ),
+        # Online round engine: incremental stepping vs the one-shot scan on
+        # the quadratic headline.  Acceptance: >= 0.7x absolute — holding the
+        # sweep open (chunked dispatch + host stitching) may cost at most 30%
+        # of the scan's throughput.
+        "session_step_vs_scan": (
+            warm_us["batch/spectral"] / warm_us["session/spectral"]
+        ),
     }
     if "shard/spectral" in warm_us:
         speedups["shard_spectral_vs_batch_spectral"] = (
@@ -311,6 +341,10 @@ def _rows_from(data: dict) -> list:
         f"batch_gd_vs_loop={sp['logistic_svrp_batch_gd_vs_loop']:.2f}x;"
         f"batch_newton_cg_vs_loop={sp['logistic_svrp_batch_newton_cg_vs_loop']:.2f}x;"
         f"minibatch_fused_vs_loop={sp['minibatch_fused_vs_loop']:.2f}x",
+    ))
+    rows.append((
+        f"session_B{B}", data["timings_us"]["session/spectral"],
+        f"session_step_vs_scan={sp['session_step_vs_scan']:.2f}x",
     ))
     return rows
 

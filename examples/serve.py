@@ -1,5 +1,13 @@
-"""Batched serving example: prefill a batch of prompts, then greedy-decode
-with the per-family KV-cache / recurrent-state machinery.
+"""Both servers, side by side: model-decode batching AND federated rounds.
+
+The repo has two serving layers that are easy to confuse:
+
+* `repro.launch.serve` — the model DECODE batch server: prefill a batch of
+  prompts, then greedy-decode with the per-family KV-cache machinery
+  (demoed first, below).
+* `repro.serve` — the federated ROUND server: continuous SVRP rounds over a
+  churning client stream (demoed second; full version in
+  examples/serve_fed.py).
 
     PYTHONPATH=src python examples/serve.py --arch rwkv6-1.6b --tokens 32
     PYTHONPATH=src python examples/serve.py --arch qwen2-1.5b
@@ -61,6 +69,19 @@ def main():
     print(f"decoded {args.tokens} tokens x {B} seqs in {dt:.2f}s "
           f"({B * args.tokens / max(dt, 1e-9):.1f} tok/s on CPU, reduced model)")
     print("sample:", toks[0, :16].tolist())
+
+    # --- and the OTHER server: continuous federated rounds ----------------
+    from repro.core import theorem2_stepsize
+    from repro.problems import make_synthetic_quadratic
+    from repro.serve import FedRoundServer
+
+    prob = make_synthetic_quadratic(num_clients=10, dim=6, mu=1.0, L=80.0,
+                                    delta=4.0, seed=1)
+    eta = theorem2_stepsize(1.0, float(prob.similarity()))
+    srv = FedRoundServer("svrp", prob, hparams={"eta": eta, "p": 0.2})
+    stats = srv.run(80)
+    print("federated round server (svrp, 10 churning clients):")
+    print(" ", stats.report())
 
 
 if __name__ == "__main__":

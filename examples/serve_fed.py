@@ -1,0 +1,67 @@
+"""Streaming federated simulation server example.
+
+Clients churn on a `ClientStream`; cohorts form on the fly from whoever is
+resident; SVRP rounds run continuously with pipelined stats readback.  The
+round body is the SAME registry definition (`repro.core.rounds.ROUND_DEFS`)
+the batch engine scans over — only the client-sampling hooks are masked to
+the resident set.
+
+    PYTHONPATH=src python examples/serve_fed.py              # full demo
+    PYTHONPATH=src python examples/serve_fed.py --quick      # CI smoke
+
+In CI the --quick run appends a rounds/sec + latency-percentile table to
+`$GITHUB_STEP_SUMMARY`.  The incremental single-sweep counterpart (step a
+`run_batch` sweep round by round) is `repro.serve.open_session`; the model
+DECODE batch server lives in `repro.launch.serve` (see examples/serve.py).
+"""
+import argparse
+import os
+
+from repro.core import theorem2_stepsize
+from repro.problems import make_synthetic_quadratic
+from repro.serve import ClientStream, FedRoundServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small population / few rounds (CI smoke)")
+    ap.add_argument("--algo", choices=["svrp", "sppm", "svrp_minibatch"],
+                    default="svrp")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--churn", type=float, default=0.15)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    M = args.clients or (10 if args.quick else 32)
+    rounds = args.rounds or (120 if args.quick else 600)
+    prob = make_synthetic_quadratic(num_clients=M, dim=8, mu=1.0, L=80.0,
+                                    delta=4.0, seed=1)
+    eta = theorem2_stepsize(1.0, float(prob.similarity()))
+    hparams = {"svrp": {"eta": eta, "p": 0.2},
+               "sppm": {"eta": 0.05},
+               "svrp_minibatch": {"eta": 3 * eta, "p": 0.25}}[args.algo]
+    extra = {"batch_clients": max(2, M // 4)} if args.algo == "svrp_minibatch" else {}
+
+    stream = ClientStream(M, churn=args.churn, seed=args.seed + 1)
+    srv = FedRoundServer(args.algo, prob, hparams=hparams, stream=stream,
+                         seed=args.seed, **extra)
+    print(f"serving {args.algo}: {M} clients, churn={args.churn}, "
+          f"{rounds} continuous rounds ...")
+    stats = srv.run(rounds)
+    print(stats.report())
+
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(stats.markdown(f"Federated round server ({args.algo})"))
+
+    # Sanity for the CI smoke: rounds completed, percentiles populated.
+    s = stats.summary()
+    assert s["rounds"] == rounds
+    assert s["p95_ms"] == s["p95_ms"], "latency percentiles must be populated"
+
+
+if __name__ == "__main__":
+    main()

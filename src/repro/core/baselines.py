@@ -12,7 +12,10 @@ server<->one client = 1 step):
 
 Each stochastic baseline exposes a pure `*_scan(problem, x0, x_star, key,
 hparams)` step-scan (traced hyperparameters, vmap-safe) for the batched
-experiment engine, plus the original jitted `run_*` wrapper.
+experiment engine, plus the original jitted `run_*` wrapper.  Each scan is
+itself just `lax.scan` over the algorithm's `*_step_def` (`core.types.StepDef`)
+— the same single-round body the incremental session layer (`repro.serve`)
+steps one round at a time.
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import RunResult
+from repro.core.types import RunResult, StepDef
 
 
 # --------------------------------------------------------------------------- SGD
@@ -30,7 +33,7 @@ class SGDParams(NamedTuple):
     stepsize: jax.Array
 
 
-def sgd_scan(problem, x0, x_star, key, hp: SGDParams, *, num_steps: int) -> RunResult:
+def sgd_step_def(problem, x0, x_star, hp: SGDParams) -> StepDef:
     M = problem.num_clients
     stepsize = jnp.asarray(hp.stepsize, x0.dtype)
 
@@ -41,9 +44,14 @@ def sgd_scan(problem, x0, x_star, key, hp: SGDParams, *, num_steps: int) -> RunR
         comm = comm + 2
         return (x_next, comm), (jnp.sum((x_next - x_star) ** 2), comm)
 
+    return StepDef(lambda: (x0, jnp.asarray(0)), step, lambda s: s[0])
+
+
+def sgd_scan(problem, x0, x_star, key, hp: SGDParams, *, num_steps: int) -> RunResult:
+    sd = sgd_step_def(problem, x0, x_star, hp)
     keys = jax.random.split(key, num_steps)
-    (x_fin, _), (d2s, comms) = jax.lax.scan(step, (x0, jnp.asarray(0)), keys)
-    return RunResult(d2s, comms, x_fin)
+    fin, (d2s, comms) = jax.lax.scan(sd.step, sd.init(), keys)
+    return RunResult(d2s, comms, sd.final(fin))
 
 
 @partial(jax.jit, static_argnames=("num_steps",))
@@ -65,12 +73,14 @@ class _SVRGState(NamedTuple):
     comm: jax.Array
 
 
-def svrg_scan(problem, x0, x_star, key, hp: SVRGParams, *, num_steps: int) -> RunResult:
+def svrg_step_def(problem, x0, x_star, hp: SVRGParams) -> StepDef:
     """L-SVRG: x_{k+1} = x_k - gamma (grad f_m(x_k) - grad f_m(w_k) + grad f(w_k))."""
     M = problem.num_clients
     stepsize = jnp.asarray(hp.stepsize, x0.dtype)
     p = jnp.asarray(hp.p, x0.dtype)
-    init = _SVRGState(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
+
+    def init():
+        return _SVRGState(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
 
     def step(s: _SVRGState, key_k):
         key_m, key_c = jax.random.split(key_k)
@@ -86,9 +96,14 @@ def svrg_scan(problem, x0, x_star, key, hp: SVRGParams, *, num_steps: int) -> Ru
             comm,
         )
 
+    return StepDef(init, step, lambda s: s.x)
+
+
+def svrg_scan(problem, x0, x_star, key, hp: SVRGParams, *, num_steps: int) -> RunResult:
+    sd = svrg_step_def(problem, x0, x_star, hp)
     keys = jax.random.split(key, num_steps)
-    fin, (d2s, comms) = jax.lax.scan(step, init, keys)
-    return RunResult(d2s, comms, fin.x)
+    fin, (d2s, comms) = jax.lax.scan(sd.step, sd.init(), keys)
+    return RunResult(d2s, comms, sd.final(fin))
 
 
 @partial(jax.jit, static_argnames=("num_steps",))
@@ -110,20 +125,22 @@ class _ScaffoldState(NamedTuple):
     comm: jax.Array
 
 
-def scaffold_scan(
-    problem, x0, x_star, key, hp: ScaffoldParams, *, num_rounds: int, local_steps: int
-) -> RunResult:
+def scaffold_step_def(
+    problem, x0, x_star, hp: ScaffoldParams, *, local_steps: int
+) -> StepDef:
     """SCAFFOLD with client sampling (one client per round), Option II variates."""
     M = problem.num_clients
     d = x0.shape[0]
     local_lr = jnp.asarray(hp.local_lr, x0.dtype)
     global_lr = jnp.asarray(hp.global_lr, x0.dtype)
-    init = _ScaffoldState(
-        x=x0,
-        c_server=jnp.zeros_like(x0),
-        c_clients=jnp.zeros((M, d), dtype=x0.dtype),
-        comm=jnp.asarray(0),
-    )
+
+    def init():
+        return _ScaffoldState(
+            x=x0,
+            c_server=jnp.zeros_like(x0),
+            c_clients=jnp.zeros((M, d), dtype=x0.dtype),
+            comm=jnp.asarray(0),
+        )
 
     def round_(s: _ScaffoldState, key_k):
         m = jax.random.randint(key_k, (), 0, M)
@@ -143,9 +160,16 @@ def scaffold_scan(
             comm,
         )
 
+    return StepDef(init, round_, lambda s: s.x)
+
+
+def scaffold_scan(
+    problem, x0, x_star, key, hp: ScaffoldParams, *, num_rounds: int, local_steps: int
+) -> RunResult:
+    sd = scaffold_step_def(problem, x0, x_star, hp, local_steps=local_steps)
     keys = jax.random.split(key, num_rounds)
-    fin, (d2s, comms) = jax.lax.scan(round_, init, keys)
-    return RunResult(d2s, comms, fin.x)
+    fin, (d2s, comms) = jax.lax.scan(sd.step, sd.init(), keys)
+    return RunResult(d2s, comms, sd.final(fin))
 
 
 @partial(jax.jit, static_argnames=("num_rounds", "local_steps"))
@@ -195,30 +219,35 @@ class DANEParams(NamedTuple):
     theta: jax.Array
 
 
-def dane_scan(
-    problem, x0, x_star, key, hp: DANEParams, *, num_rounds: int, surrogate_client: int = 0
-) -> RunResult:
+def dane_step_def(
+    problem, x0, x_star, hp: DANEParams, *, surrogate_client: int = 0
+) -> StepDef:
     """DANE/SONATA-style surrogate minimization (full participation).
 
-    Deterministic; `key` is accepted (and ignored) so the engine can treat all
-    algorithms uniformly.
+    Deterministic; the round accepts (and ignores) a key so the scan and
+    session substrates can treat all algorithms uniformly.
     """
-    del key
     M = problem.num_clients
     theta = jnp.asarray(hp.theta, x0.dtype)
     s_idx = jnp.asarray(surrogate_client)
 
-    def round_(carry, _):
+    def round_(carry, _key):
         x, comm = carry
         d_lin = problem.full_grad(x) - problem.grad(s_idx, x)
         x_next = _surrogate_min(problem, s_idx, d_lin, x, theta)
         comm = comm + 2 * M + 2
         return (x_next, comm), (jnp.sum((x_next - x_star) ** 2), comm)
 
-    (x_fin, _), (d2s, comms) = jax.lax.scan(
-        round_, (x0, jnp.asarray(0)), None, length=num_rounds
-    )
-    return RunResult(d2s, comms, x_fin)
+    return StepDef(lambda: (x0, jnp.asarray(0)), round_, lambda s: s[0])
+
+
+def dane_scan(
+    problem, x0, x_star, key, hp: DANEParams, *, num_rounds: int, surrogate_client: int = 0
+) -> RunResult:
+    del key  # deterministic
+    sd = dane_step_def(problem, x0, x_star, hp, surrogate_client=surrogate_client)
+    fin, (d2s, comms) = jax.lax.scan(sd.step, sd.init(), None, length=num_rounds)
+    return RunResult(d2s, comms, sd.final(fin))
 
 
 @partial(jax.jit, static_argnames=("num_rounds",))
@@ -242,9 +271,9 @@ class _AccEGState(NamedTuple):
     comm: jax.Array
 
 
-def acc_extragradient_scan(
-    problem, x0, x_star, key, hp: AccEGParams, *, num_rounds: int, surrogate_client: int = 0
-) -> RunResult:
+def acc_extragradient_step_def(
+    problem, x0, x_star, hp: AccEGParams, *, surrogate_client: int = 0
+) -> StepDef:
     """Accelerated Extragradient sliding (Kovalev et al., 2022 family) — the
     strongest full-participation baseline under Assumption 1:
     O~(sqrt(delta/mu) M) communication.
@@ -262,9 +291,9 @@ def acc_extragradient_scan(
     the strongly-convex Nesterov coefficient for kappa = theta/mu.  Comm: two
     full-gradient rounds + surrogate exchange = 4M + 2 per round.
     (Empirically verified linear + accelerated on quadratics; see tests.)
-    Deterministic; `key` is accepted (and ignored) for engine uniformity.
+    Deterministic; the round accepts (and ignores) a key for substrate
+    uniformity.
     """
-    del key
     M = problem.num_clients
     theta = jnp.asarray(hp.theta, x0.dtype)
     s_idx = jnp.asarray(surrogate_client)
@@ -274,16 +303,25 @@ def acc_extragradient_scan(
     def gradp(x):
         return problem.full_grad(x) - problem.grad(s_idx, x)
 
-    def round_(s: _AccEGState, _):
+    def round_(s: _AccEGState, _key):
         y = s.x + beta * (s.x - s.x_prev)
         u = _surrogate_min(problem, s_idx, gradp(y), y, theta)
         x_next = _surrogate_min(problem, s_idx, gradp(u), y, theta)
         comm = s.comm + 4 * M + 2
         return _AccEGState(x_next, s.x, comm), (jnp.sum((x_next - x_star) ** 2), comm)
 
-    init = _AccEGState(x0, x0, jnp.asarray(0))
-    fin, (d2s, comms) = jax.lax.scan(round_, init, None, length=num_rounds)
-    return RunResult(d2s, comms, fin.x)
+    return StepDef(lambda: _AccEGState(x0, x0, jnp.asarray(0)), round_, lambda s: s.x)
+
+
+def acc_extragradient_scan(
+    problem, x0, x_star, key, hp: AccEGParams, *, num_rounds: int, surrogate_client: int = 0
+) -> RunResult:
+    del key  # deterministic
+    sd = acc_extragradient_step_def(
+        problem, x0, x_star, hp, surrogate_client=surrogate_client
+    )
+    fin, (d2s, comms) = jax.lax.scan(sd.step, sd.init(), None, length=num_rounds)
+    return RunResult(d2s, comms, sd.final(fin))
 
 
 @partial(jax.jit, static_argnames=("num_rounds",))

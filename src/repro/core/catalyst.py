@@ -50,6 +50,17 @@ class CatalyzedSVRPParams(NamedTuple):
     smoothness: jax.Array  # used only by the "gd" inner prox solver
 
 
+def catalyst_extrapolate(alpha_prev, q):
+    """The Catalyst momentum recurrence, shared by every substrate (the nested
+    scan below, `rounds._catalyzed_batched_scan`, and `catalyzed_step_def`):
+    alpha_t solves  alpha^2 = (1 - alpha) alpha_{t-1}^2 + q alpha,  and beta_t
+    is the extrapolation weight  y_t = x_t + beta_t (x_t - x_{t-1})."""
+    ap2 = alpha_prev**2
+    alpha_t = 0.5 * ((q - ap2) + jnp.sqrt((q - ap2) ** 2 + 4.0 * ap2))
+    beta_t = alpha_prev * (1.0 - alpha_prev) / (ap2 + alpha_t)
+    return alpha_t, beta_t
+
+
 def theorem3_gamma(mu: float, delta: float, M: int) -> float:
     """The smoothing parameter choice from the proof of Theorem 3."""
     if delta / mu >= math.sqrt(M):
@@ -112,10 +123,7 @@ def catalyzed_svrp_scan(
         )
         x_t = res.x_final
 
-        # alpha_t solves alpha^2 = (1 - alpha) alpha_{t-1}^2 + q alpha.
-        ap2 = alpha_prev**2
-        alpha_t = 0.5 * ((q - ap2) + jnp.sqrt((q - ap2) ** 2 + 4.0 * ap2))
-        beta_t = alpha_prev * (1.0 - alpha_prev) / (ap2 + alpha_t)
+        alpha_t, beta_t = catalyst_extrapolate(alpha_prev, q)
         y_t = x_t + beta_t * (x_t - x_prev)
 
         comm = res.comm + comm0
@@ -133,6 +141,107 @@ _catalyzed_svrp_jit = jax.jit(
     catalyzed_svrp_scan,
     static_argnames=("num_outer", "inner_steps", "prox_solver", "prox_steps", "prox_tol"),
 )
+
+
+def catalyzed_step_def(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    hp: CatalyzedSVRPParams,
+    *,
+    num_outer: int,
+    inner_steps: int,
+    prox_solver: str = "exact",
+    prox_steps: int = 50,
+    prox_tol: float = 1e-10,
+):
+    """Catalyzed SVRP as an incrementally steppable unit (`core.types.StepDef`)
+    for the online session layer (`repro.serve.FedSession`).
+
+    The nested scan above runs stage-at-a-time; here the SAME per-round math
+    is flattened to one round per `step` call: the carried state tracks the
+    outer recurrence (x_prev, y_prev, alpha_prev, carried comm offset), the
+    inner SVRP state, and the position within the current stage.  Stage
+    boundaries happen inside `lax.cond`s — re-init the inner state on the
+    shifted problem at pos == 0, extrapolate (`catalyst_extrapolate`) after
+    round inner_steps - 1.  The key schedule reproduces the nested scan's
+    per-stage splits exactly, which is why `schedule` is custom: a flat
+    `split(key, num_outer * inner_steps)` would NOT match (split is not
+    prefix-stable), so the horizon must be num_outer * inner_steps.
+    """
+    from repro.core.prox import get_prox_solver
+    from repro.core.rounds import ROUND_DEFS, make_registry_ops
+    from repro.core.types import StepDef
+
+    dtype = x0.dtype
+    mu = jnp.asarray(hp.mu, dtype)
+    gamma = jnp.asarray(hp.gamma, dtype)
+    q = mu / (mu + gamma)
+    inner_hp = SVRPParams(eta=hp.eta, p=hp.p, smoothness=hp.smoothness)
+    get_prox_solver(prox_solver, problem)  # validate the pair at trace time
+    base_factors = problem.prox_factors() if prox_solver == "spectral" else None
+    rdef = ROUND_DEFS["svrp"]
+
+    def _stage_ops(y_prev):
+        # Same per-stage binding as the nested scan: shifted problem, shared
+        # spectral eigenvectors shifted by gamma, distances to the ORIGINAL
+        # optimum.
+        h_t = problem.shifted(gamma, y_prev)
+        pf = (base_factors[0] + gamma, base_factors[1]) if base_factors else None
+        return make_registry_ops(
+            "svrp", h_t, x0, x_star, inner_hp, batched=False,
+            prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
+            prox_factors=pf,
+        )
+
+    def _stage_init(ops, x):
+        st = rdef.init(ops, x)
+        # Anchor the inner comm counter to int32 (the value a round's
+        # `+ 3M * c.astype(int32)` promotes it to anyway) so the lax.cond
+        # re-init branch and the carried state agree on dtype.
+        return st[:-1] + (st[-1].astype(jnp.int32),)
+
+    def init():
+        return (
+            x0, x0, jnp.sqrt(q), jnp.zeros((), jnp.int32),
+            _stage_init(_stage_ops(x0), x0), jnp.zeros((), jnp.int32),
+        )
+
+    def step(s, key_r):
+        x_prev, y_prev, alpha_prev, comm0, inner, pos = s
+        ops = _stage_ops(y_prev)
+        inner_in = jax.lax.cond(
+            pos == 0, lambda: _stage_init(ops, x_prev), lambda: inner
+        )
+        inner_out, (d2, comm_in) = rdef.round(ops, inner_in, key_r)
+        comm_rep = comm_in + comm0
+        at_end = pos + 1 == inner_steps
+
+        def end():
+            x_t = inner_out[0]
+            alpha_t, beta_t = catalyst_extrapolate(alpha_prev, q)
+            return (x_t, x_t + beta_t * (x_t - x_prev), alpha_t, comm_rep)
+
+        x2, y2, a2, c2 = jax.lax.cond(
+            at_end, end, lambda: (x_prev, y_prev, alpha_prev, comm0)
+        )
+        pos2 = jnp.where(at_end, 0, pos + 1).astype(jnp.int32)
+        return (x2, y2, a2, c2, inner_out, pos2), (d2, comm_rep)
+
+    def final(s):
+        return s[4][0]  # the inner iterate (== x_t right after a stage end)
+
+    def schedule(key, n):
+        if n != num_outer * inner_steps:
+            raise ValueError(
+                f"catalyzed_svrp steps in whole stages: the horizon must be "
+                f"num_outer * inner_steps = {num_outer * inner_steps}, got {n}"
+            )
+        stage_keys = jax.random.split(key, num_outer)
+        per_stage = jax.vmap(lambda k: jax.random.split(k, inner_steps))(stage_keys)
+        return per_stage.reshape(num_outer * inner_steps)
+
+    return StepDef(init, step, final, schedule)
 
 
 def run_catalyst(

@@ -20,7 +20,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import RunResult
+from repro.core.types import RunResult, StepDef
 
 
 # ------------------------------------------------------------------ prox of R
@@ -89,18 +89,17 @@ class _State(NamedTuple):
     comm: jax.Array
 
 
-def composite_svrp_scan(
+def composite_step_def(
     problem,
     x0: jax.Array,
     x_star: jax.Array,
-    key: jax.Array,
     hp: CompositeSVRPParams,
     *,
-    num_steps: int,
     prox_R: Callable,
     prox_steps: int = 80,
-) -> RunResult:
-    """Algorithm 4 as a pure lax.scan — jit- AND vmap-safe.
+) -> StepDef:
+    """Algorithm 4's single round as a `core.types.StepDef` — jit- AND
+    vmap-safe, shared by the scan below and the incremental session layer.
 
     All hyperparameters (`eta`, `p`, `smoothness`, `mu`) are traced scalars in
     `hp`; `prox_R` (the regularizer's prox) and the step counts are static
@@ -112,7 +111,9 @@ def composite_svrp_scan(
     M = problem.num_clients
     eta = jnp.asarray(hp.eta, x0.dtype)
     p = jnp.asarray(hp.p, x0.dtype)
-    init = _State(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
+
+    def init():
+        return _State(x0, x0, problem.full_grad(x0), jnp.asarray(3 * M))
 
     def step(s: _State, key_k):
         key_m, key_c = jax.random.split(key_k)
@@ -131,9 +132,25 @@ def composite_svrp_scan(
             comm,
         )
 
+    return StepDef(init, step, lambda s: s.x)
+
+
+def composite_svrp_scan(
+    problem,
+    x0: jax.Array,
+    x_star: jax.Array,
+    key: jax.Array,
+    hp: CompositeSVRPParams,
+    *,
+    num_steps: int,
+    prox_R: Callable,
+    prox_steps: int = 80,
+) -> RunResult:
+    """Algorithm 4 as a pure lax.scan over `composite_step_def`."""
+    sd = composite_step_def(problem, x0, x_star, hp, prox_R=prox_R, prox_steps=prox_steps)
     keys = jax.random.split(key, num_steps)
-    fin, (d2s, comms) = jax.lax.scan(step, init, keys)
-    return RunResult(d2s, comms, fin.x)
+    fin, (d2s, comms) = jax.lax.scan(sd.step, sd.init(), keys)
+    return RunResult(d2s, comms, sd.final(fin))
 
 
 @partial(jax.jit, static_argnames=("num_steps", "prox_steps", "prox_R"))

@@ -30,9 +30,13 @@ from typing import Any, Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.rounds import ROUND_DEFS, RoundOps, local_prox_gd_tree, scan_rounds
+from repro.core.rounds import (
+    ROUND_DEFS,
+    local_prox_gd_tree,
+    make_registry_ops,
+    scan_rounds,
+)
 from repro.core.types import RunResult
-from repro.kernels.ref import prox_update as _prox_update_ref
 from repro.utils.tree import (
     tree_add,
     tree_axpy,
@@ -184,27 +188,12 @@ def deep_svrp_scan(
     local solver binding (Algorithm 7 at the explicit `local_lr` stepsize over
     the (M, d) cohort rows) lives here.
     """
-    M = problem.num_clients
-    d = x0.shape[-1]
-    eta = jnp.asarray(hp.eta, x0.dtype)
-    # The canonical Algorithm-7 update (kernels.ref.prox_update) uses
-    # reciprocal-multiply, bit-identical to the fused Pallas kernel.
-    inv_eta = 1.0 / eta
-    beta = jnp.asarray(hp.local_lr, x0.dtype)
-    clients = jnp.arange(M)
-    grad_rows = jax.vmap(problem.grad)  # (M,), (M, d) -> (M, d)
-
-    def local_prox_gd(z, x):  # (M, d) targets, shared start x -> (M, d)
-        def local(y, _):
-            return _prox_update_ref(y, grad_rows(clients, y), z, beta, inv_eta), None
-
-        y, _ = jax.lax.scan(
-            local, jnp.broadcast_to(x, (M, d)), None, length=local_steps
-        )
-        return y
-
-    ops = RoundOps(
-        problem, hp, x_star, x0.dtype, batched=False, local_prox_gd=local_prox_gd
+    # The canonical Algorithm-7 update (kernels.ref.prox_update) binding —
+    # reciprocal-multiply, bit-identical to the fused Pallas kernel — lives in
+    # rounds.make_registry_ops, shared with the batched/incremental substrates.
+    ops = make_registry_ops(
+        "deep_svrp", problem, x0, x_star, hp, batched=False,
+        local_steps=local_steps,
     )
     return scan_rounds(ROUND_DEFS["deep_svrp"], ops, x0, key, num_steps)
 

@@ -34,8 +34,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.prox import get_prox_solver
-from repro.core.rounds import ROUND_DEFS, RoundOps, scan_rounds
+from repro.core.rounds import ROUND_DEFS, make_registry_ops, scan_rounds
 from repro.core.types import RunResult
 
 
@@ -66,21 +65,10 @@ def svrp_minibatch_scan(
     see `repro.core.prox`); the per-client subproblems of a round share one
     hoisted prepare() and are solved under vmap.
     """
-    eta = jnp.asarray(hp.eta, x0.dtype)
-    solver = get_prox_solver(prox_solver, problem)
-    factors = solver.prepare(problem)
-
-    def cohort_prox(ms, z):  # (b,), (b, d) -> (b, d)
-        return jax.vmap(
-            lambda m, z_m: solver.solve(
-                problem, factors, m, z_m, eta,
-                smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
-            )
-        )(ms, z)
-
-    ops = RoundOps(
-        problem, hp, x_star, x0.dtype, batched=False,
-        cohort_prox=cohort_prox, cohort_size=batch_clients,
+    ops = make_registry_ops(
+        "svrp_minibatch", problem, x0, x_star, hp, batched=False,
+        prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
+        batch_clients=batch_clients,
     )
     return scan_rounds(ROUND_DEFS["svrp_minibatch"], ops, x0, key, num_steps)
 

@@ -34,6 +34,14 @@ fused           hand-batched ``(B, d)`` state with the Algorithm-7 local
                 solves routed through the batched Pallas kernels; same
                 vmapped per-trial sampling (bit-identical key usage) and
                 batch-aware refresh.  Entry point: ``batched_scan``.
+incremental     the SAME sequential/batched bindings (``make_registry_ops``)
+                stepped one chunk at a time instead of scanned to a fixed
+                horizon: ``registry_step_def`` exposes each ``(init, round)``
+                pair as a `core.types.StepDef` consumed by the online session
+                layer (`repro.serve.FedSession` — ``open_session`` /
+                ``session.step(n)`` / ``run_until(eps)``) and the streaming
+                federated server (`repro.serve.FedRoundServer`, which swaps
+                the sampling fns to draw cohorts from resident clients only).
 ==============  ==============================================================
 
 Batch-aware anchor refresh
@@ -102,6 +110,8 @@ class RoundOps:
         local_prox_gd: Callable | None = None,
         grad: Callable | None = None,
         full_grad: Callable | None = None,
+        uniform_client_fn: Callable | None = None,
+        sample_cohort_fn: Callable | None = None,
     ):
         self.problem = problem
         self.hp = hp
@@ -114,6 +124,11 @@ class RoundOps:
         self.cohort_prox = cohort_prox
         self.cohort_size = cohort_size
         self.local_prox_gd = local_prox_gd
+        # Substrate-level sampling overrides: the streaming server restricts
+        # client/cohort draws to the currently RESIDENT clients (a (M,) mask)
+        # by swapping these, leaving the round definitions untouched.
+        self._uniform_client_fn = uniform_client_fn
+        self._sample_cohort_fn = sample_cohort_fn
         # Substrate-level oracle overrides (already batched when batched=True):
         # Catalyst's inner rounds substitute per-trial SHIFTED gradients here.
         self._grad = problem.grad
@@ -142,12 +157,16 @@ class RoundOps:
         return s[:, 0], s[:, 1]
 
     def uniform_client(self, key):
+        if self._uniform_client_fn is not None:
+            return self._uniform_client_fn(key)
         if not self.batched:
             return jax.random.randint(key, (), 0, self.M)
         return jax.vmap(lambda k: jax.random.randint(k, (), 0, self.M))(key)
 
     def sample_cohort(self, key):
         """``cohort_size`` clients without replacement (minibatch SVRP)."""
+        if self._sample_cohort_fn is not None:
+            return self._sample_cohort_fn(key)
         b = self.cohort_size
         if not self.batched:
             return jax.random.choice(key, self.M, shape=(b,), replace=False)
@@ -367,6 +386,146 @@ ROUND_DEFS: dict[str, RoundDef] = {
 # trial actually refreshes.
 
 
+def make_registry_ops(
+    algo: str, problem, x0, x_star, hp, *,
+    batched: bool, num_trials: int | None = None,
+    prox_solver: str = "exact", prox_steps: int = 50,
+    prox_tol: float = 1e-10, batch_clients: int | None = None,
+    local_steps: int | None = None, prox_factors=None,
+    uniform_client_fn: Callable | None = None,
+    sample_cohort_fn: Callable | None = None,
+) -> RoundOps:
+    """Bind one rounds-defined algorithm's substrate: registry prox solve +
+    Algorithm-7 local loop, per trial (``batched=False``, the historical
+    ``*_scan`` binding) or vmapped over a ``(B,)`` sweep (``batched=True``).
+
+    The ONE binding every entry point shares: the sequential ``*_scan``
+    wrappers (core/svrp.py etc.), the engine's default batched path
+    (`registry_batched_scan`), the incremental session (`registry_step_def`)
+    and the streaming server (which additionally swaps the sampling fns to
+    draw from resident clients only) all call this — so the prox/oracle
+    wiring can never drift between drivers.
+
+    ``prox_factors`` passes pre-hoisted solver state (Catalyst's per-stage
+    shifted spectral factors); otherwise the solver's own ``prepare`` runs
+    here, once, outside any scan.
+    """
+    from repro.core.prox import get_prox_solver
+
+    B = num_trials
+    dtype = x0.dtype
+    kw: dict[str, Any] = {
+        "uniform_client_fn": uniform_client_fn,
+        "sample_cohort_fn": sample_cohort_fn,
+    }
+
+    if algo == "deep_svrp":
+        M = problem.num_clients
+        clients = jnp.arange(M)
+        if batched:
+            from repro.kernels.ref import prox_update_batched as _prox_update_ref_b
+
+            beta = jnp.broadcast_to(jnp.asarray(hp.local_lr, dtype), (B,))
+            inv_eta = 1.0 / jnp.broadcast_to(jnp.asarray(hp.eta, dtype), (B,))
+            grad_cohort = jax.vmap(jax.vmap(problem.grad))
+
+            def local_prox_gd(z, x):  # (B, M, d) targets, (B, d) shared start
+                ms = jnp.broadcast_to(clients, (B, M))
+
+                def local(y, _):
+                    # The canonical Algorithm-7 update (kernels.ref), the same
+                    # single source the sequential driver scans.
+                    return (
+                        _prox_update_ref_b(y, grad_cohort(ms, y), z, beta, inv_eta),
+                        None,
+                    )
+
+                y0 = jnp.broadcast_to(x[:, None, :], z.shape)
+                y, _ = jax.lax.scan(local, y0, None, length=local_steps)
+                return y
+        else:
+            from repro.kernels.ref import prox_update as _prox_update_ref
+
+            beta = jnp.asarray(hp.local_lr, dtype)
+            inv_eta = 1.0 / jnp.asarray(hp.eta, dtype)
+            grad_rows = jax.vmap(problem.grad)  # (M,), (M, d) -> (M, d)
+
+            def local_prox_gd(z, x):  # (M, d) targets, shared start x -> (M, d)
+                def local(y, _):
+                    return _prox_update_ref(y, grad_rows(clients, y), z, beta, inv_eta), None
+
+                y0 = jnp.broadcast_to(x, z.shape)
+                y, _ = jax.lax.scan(local, y0, None, length=local_steps)
+                return y
+
+        kw["local_prox_gd"] = local_prox_gd
+    else:
+        solver = get_prox_solver(prox_solver, problem)
+        factors = prox_factors if prox_factors is not None else solver.prepare(problem)
+        if batched:
+            eta = jnp.broadcast_to(jnp.asarray(hp.eta, dtype), (B,))
+            L = jnp.broadcast_to(
+                jnp.asarray(getattr(hp, "smoothness", 0.0), dtype), (B,)
+            )
+
+            def solve_one(m, z, e, s):
+                return solver.solve(
+                    problem, factors, m, z, e,
+                    smoothness=s, steps=prox_steps, tol=prox_tol,
+                )
+
+            if algo == "svrp_minibatch":
+                def cohort_prox(ms, z):  # (B, b), (B, b, d) -> (B, b, d)
+                    per_trial = jax.vmap(solve_one, in_axes=(0, 0, None, None))
+                    return jax.vmap(per_trial)(ms, z, eta, L)
+
+                kw["cohort_prox"] = cohort_prox
+                kw["cohort_size"] = batch_clients
+            else:
+                kw["prox"] = lambda m, z: jax.vmap(solve_one)(m, z, eta, L)
+        else:
+            eta = jnp.asarray(hp.eta, dtype)
+
+            def solve_one_seq(m, z_m):
+                return solver.solve(
+                    problem, factors, m, z_m, eta,
+                    smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
+                )
+
+            if algo == "svrp_minibatch":
+                kw["cohort_prox"] = lambda ms, z: jax.vmap(solve_one_seq)(ms, z)
+                kw["cohort_size"] = batch_clients
+            else:
+                kw["prox"] = solve_one_seq
+
+    return RoundOps(
+        problem, hp, x_star, dtype, batched=batched, num_trials=B, **kw
+    )
+
+
+def registry_step_def(
+    algo: str, problem, x0, x_star, hp, *,
+    batched: bool, num_trials: int | None = None, **binding,
+):
+    """The rounds-defined algorithms' incremental unit (`core.types.StepDef`):
+    the SAME `(init, round)` pair `scan_rounds` scans, exposed step-at-a-time
+    for `repro.serve.FedSession`.  `binding` is forwarded to
+    `make_registry_ops` (prox_solver/prox_steps/prox_tol/batch_clients/
+    local_steps and the server's sampling overrides)."""
+    from repro.core.types import StepDef
+
+    ops = make_registry_ops(
+        algo, problem, x0, x_star, hp,
+        batched=batched, num_trials=num_trials, **binding,
+    )
+    rdef = ROUND_DEFS[algo]
+    return StepDef(
+        init=lambda: rdef.init(ops, x0),
+        step=lambda s, k: rdef.round(ops, s, k),
+        final=lambda s: s[0],
+    )
+
+
 def registry_batched_scan(
     algo: str, problem, x0, x_star, keys, hp, *,
     num_steps: int, prox_solver: str = "exact", prox_steps: int = 50,
@@ -375,57 +534,12 @@ def registry_batched_scan(
 ) -> RunResult:
     """Run one rounds-defined algorithm hand-batched with its registry prox
     solver vmapped per trial (per-trial eta/smoothness ride the vmap)."""
-    from repro.core.prox import get_prox_solver
-
-    B = keys.shape[0]
-    dtype = x0.dtype
-    kw: dict[str, Any] = {}
-
-    if algo == "deep_svrp":
-        from repro.kernels.ref import prox_update_batched as _prox_update_ref_b
-
-        M = problem.num_clients
-        beta = jnp.broadcast_to(jnp.asarray(hp.local_lr, dtype), (B,))
-        inv_eta = 1.0 / jnp.broadcast_to(jnp.asarray(hp.eta, dtype), (B,))
-        clients = jnp.arange(M)
-        grad_cohort = jax.vmap(jax.vmap(problem.grad))
-
-        def local_prox_gd(z, x):  # (B, M, d) targets, (B, d) shared start
-            ms = jnp.broadcast_to(clients, (B, M))
-
-            def local(y, _):
-                # The canonical Algorithm-7 update (kernels.ref), the same
-                # single source the sequential driver scans.
-                return _prox_update_ref_b(y, grad_cohort(ms, y), z, beta, inv_eta), None
-
-            y0 = jnp.broadcast_to(x[:, None, :], z.shape)
-            y, _ = jax.lax.scan(local, y0, None, length=local_steps)
-            return y
-
-        kw["local_prox_gd"] = local_prox_gd
-    else:
-        solver = get_prox_solver(prox_solver, problem)
-        factors = solver.prepare(problem)
-        eta = jnp.broadcast_to(jnp.asarray(hp.eta, dtype), (B,))
-        L = jnp.broadcast_to(jnp.asarray(getattr(hp, "smoothness", 0.0), dtype), (B,))
-
-        def solve_one(m, z, e, s):
-            return solver.solve(
-                problem, factors, m, z, e,
-                smoothness=s, steps=prox_steps, tol=prox_tol,
-            )
-
-        if algo == "svrp_minibatch":
-            def cohort_prox(ms, z):  # (B, b), (B, b, d) -> (B, b, d)
-                per_trial = jax.vmap(solve_one, in_axes=(0, 0, None, None))
-                return jax.vmap(per_trial)(ms, z, eta, L)
-
-            kw["cohort_prox"] = cohort_prox
-            kw["cohort_size"] = batch_clients
-        else:
-            kw["prox"] = lambda m, z: jax.vmap(solve_one)(m, z, eta, L)
-
-    ops = RoundOps(problem, hp, x_star, dtype, batched=True, num_trials=B, **kw)
+    ops = make_registry_ops(
+        algo, problem, x0, x_star, hp,
+        batched=True, num_trials=keys.shape[0],
+        prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
+        batch_clients=batch_clients, local_steps=local_steps,
+    )
     return scan_rounds(ROUND_DEFS[algo], ops, x0, keys, num_steps)
 
 
@@ -678,10 +792,9 @@ def _catalyzed_batched_scan(
         )
         x_t = final[0]
 
-        # alpha_t solves alpha^2 = (1 - alpha) alpha_{t-1}^2 + q alpha.
-        ap2 = alpha_prev**2
-        alpha_t = 0.5 * ((q - ap2) + jnp.sqrt((q - ap2) ** 2 + 4.0 * ap2))
-        beta_t = alpha_prev * (1.0 - alpha_prev) / (ap2 + alpha_t)
+        from repro.core.catalyst import catalyst_extrapolate
+
+        alpha_t, beta_t = catalyst_extrapolate(alpha_prev, q)
         y_t = x_t + beta_t[:, None] * (x_t - x_prev)
 
         comm = comms + comm0[None, :]

@@ -20,8 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.prox import get_prox_solver
-from repro.core.rounds import ROUND_DEFS, RoundOps, scan_rounds
+from repro.core.rounds import ROUND_DEFS, make_registry_ops, scan_rounds
 from repro.core.types import RunResult
 
 
@@ -44,16 +43,9 @@ def sppm_scan(
     prox_steps: int = 50,
     prox_tol: float = 1e-10,
 ) -> RunResult:
-    eta = jnp.asarray(hp.eta, x0.dtype)
-    solver = get_prox_solver(prox_solver, problem)
-    factors = solver.prepare(problem)
-
-    ops = RoundOps(
-        problem, hp, x_star, x0.dtype, batched=False,
-        prox=lambda m, z: solver.solve(
-            problem, factors, m, z, eta,
-            smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
-        ),
+    ops = make_registry_ops(
+        "sppm", problem, x0, x_star, hp, batched=False,
+        prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
     )
     return scan_rounds(ROUND_DEFS["sppm"], ops, x0, key, num_steps)
 

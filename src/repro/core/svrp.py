@@ -35,8 +35,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.prox import get_prox_solver
-from repro.core.rounds import ROUND_DEFS, RoundOps, scan_rounds
+from repro.core.rounds import ROUND_DEFS, make_registry_ops, scan_rounds
 from repro.core.types import RunResult
 
 
@@ -77,18 +76,10 @@ def svrp_scan(
     and the full gradient is recomputed lazily under `lax.cond` only on
     refresh steps.
     """
-    eta = jnp.asarray(hp.eta, x0.dtype)
-    solver = get_prox_solver(prox_solver, problem)
-    factors = prox_factors
-    if factors is None:
-        factors = solver.prepare(problem)
-
-    ops = RoundOps(
-        problem, hp, x_star, x0.dtype, batched=False,
-        prox=lambda m, z: solver.solve(
-            problem, factors, m, z, eta,
-            smoothness=hp.smoothness, steps=prox_steps, tol=prox_tol,
-        ),
+    ops = make_registry_ops(
+        "svrp", problem, x0, x_star, hp, batched=False,
+        prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
+        prox_factors=prox_factors,
     )
     return scan_rounds(ROUND_DEFS["svrp"], ops, x0, key, num_steps)
 

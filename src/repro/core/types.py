@@ -1,9 +1,34 @@
 """Shared result/accounting types for the paper-faithful algorithm layer."""
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
+
+
+class StepDef(NamedTuple):
+    """One algorithm as an incrementally steppable unit on one substrate.
+
+    The `(init, step)` pair is the same round body the offline `*_scan`
+    drivers execute — `lax.scan(sd.step, sd.init(), sd.schedule(key, n))`
+    reproduces the scan driver exactly, and `repro.serve.FedSession` steps the
+    SAME jitted body one chunk at a time, so the two can never drift apart.
+
+    * ``init() -> state``                       — round-0 state;
+    * ``step(state, key) -> (state, (dist_sq, comm))`` — one communication
+      round (deterministic algorithms accept and ignore the key);
+    * ``final(state) -> x``                     — current iterate;
+    * ``schedule(key, n) -> (n,) keys``         — the driver's per-round key
+      array.  ``None`` means the default ``jax.random.split(key, n)``; only
+      algorithms with a nested key layout (Catalyst's per-stage splits)
+      override it.  `jax.random.split` is NOT prefix-stable in ``n``, so the
+      schedule must be built ONCE for the full horizon — never extended.
+    """
+
+    init: Callable[[], Any]
+    step: Callable[[Any, jax.Array], tuple]
+    final: Callable[[Any], jax.Array]
+    schedule: Callable[[jax.Array, int], jax.Array] | None = None
 
 
 class RunResult(NamedTuple):

@@ -6,12 +6,18 @@ in a single jit; `shard="data"` lays that axis over the device mesh via
 shard_map, one fully-local block of trials per device.  `run_sequential` is
 the per-trial Python loop it replaces (kept as the equivalence oracle and
 benchmark baseline).
+
+`RunSpec` is the shared "what to run" record consumed by `run_batch`,
+`run_sequential` AND the incremental session layer (`repro.serve.open_session`)
+— one resolution path, identical validation errors from all three.
 """
 from repro.experiments.grid import expand_grid, grid_size, trial_labels, with_seeds
 from repro.experiments.runner import (
     ALGOS,
     AlgoSpec,
     BatchResult,
+    RunSpec,
+    as_runspec,
     run_batch,
     run_sequential,
 )
@@ -20,6 +26,8 @@ __all__ = [
     "ALGOS",
     "AlgoSpec",
     "BatchResult",
+    "RunSpec",
+    "as_runspec",
     "expand_grid",
     "grid_size",
     "run_batch",

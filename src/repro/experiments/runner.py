@@ -51,11 +51,18 @@ shard_map (one group of trials per device), padding B up to a multiple of the
 device count with duplicate trials and masking the pad out of the returned
 result — each device runs its own vmapped (or fused-Pallas) block of the
 sweep with zero cross-device collectives.
+
+What to run (the `ALGOS` table, `AlgoSpec`, and the shared `RunSpec` all
+three entry points consume) lives in `repro.experiments.spec` and is
+re-exported here; `run_batch(RunSpec(...), problem)` and the legacy keyword
+style resolve through the same `RunSpec.resolve`.  A fourth substrate — the
+incremental session layer (`repro.serve.open_session` / `FedSession`), which
+steps the SAME round bodies n rounds at a time with device-resident donated
+state — is what `stop_eps=` routes through for early stopping.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 from typing import Any, Callable, Mapping, NamedTuple, Sequence
 
 import jax
@@ -63,159 +70,46 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.baselines import (
-    AccEGParams,
-    DANEParams,
-    ScaffoldParams,
-    SGDParams,
-    SVRGParams,
-    acc_extragradient_scan,
-    dane_scan,
-    scaffold_scan,
-    sgd_scan,
-    svrg_scan,
-)
-from repro.core.catalyst import CatalyzedSVRPParams, catalyzed_svrp_scan
-from repro.core.composite import CompositeSVRPParams, composite_svrp_scan
-from repro.core.deep import DeepSVRPScanParams, deep_svrp_scan
-from repro.core.minibatch import MinibatchParams, svrp_minibatch_scan
-from repro.core.prox import get_prox_solver
 from repro.core.rounds import (
     ROUND_DEFS,
     batched_scan,
     fused_oracle_kind,
     registry_batched_scan,
 )
-from repro.core.sppm import SPPMParams, sppm_scan
-from repro.core.svrp import SVRPParams, svrp_scan
 from repro.core.types import RunResult
-from repro.experiments.grid import expand_grid, trial_labels, with_seeds
+from repro.experiments.grid import trial_labels
+from repro.experiments.spec import (  # noqa: F401  (re-exported API)
+    ALGOS,
+    AlgoSpec,
+    ResolvedRun,
+    RunSpec,
+    _REQUIRED,
+    _device_hparams,
+    _keys_for,
+    as_runspec,
+    check_substrate,
+    resolve_algo,
+)
 from repro.utils.shard import shard_map_compat
-
-_REQUIRED = object()
-
-
-@dataclass(frozen=True)
-class AlgoSpec:
-    """How the engine drives one algorithm.
-
-    `defaults` maps every hparam field of `params_cls` to its default value
-    (`_REQUIRED` = the caller's grid must provide it); `static` maps every
-    static-config kwarg of `scan_fn` likewise.
-    """
-
-    params_cls: type
-    scan_fn: Callable[..., RunResult]
-    defaults: Mapping[str, Any]
-    static: Mapping[str, Any]
-    fusable: bool = False  # runs on the fused substrate (rounds.batched_scan)
-    # Which static-config key supplies the fused path's Algorithm-7 inner step
-    # count ("prox_steps" for registry-prox algos, "local_steps" for
-    # DeepSVRP's explicit-stepsize local loop).  Declared here so the fused
-    # driver can never pick the wrong inner-step count for a new algo.
-    fused_inner_steps: str | None = None
-    # Which static-config key supplies the fused scan's ROUND count per
-    # trajectory segment ("inner_steps" for Catalyst's nested stages).
-    fused_round_steps: str = "num_steps"
-    deterministic: bool = False  # ignores the PRNG key; run_batch rejects multi-seed sweeps
-    requires_x_star: bool = False  # problem.minimizer() is NOT the right reference point
-
-
-_PROX_STATIC = {
-    "num_steps": _REQUIRED,
-    "prox_solver": "exact",
-    "prox_steps": 50,
-    "prox_tol": 1e-10,
-}
-
-ALGOS: dict[str, AlgoSpec] = {
-    "sppm": AlgoSpec(
-        SPPMParams, sppm_scan,
-        defaults={"eta": _REQUIRED, "smoothness": 0.0},
-        static=_PROX_STATIC, fusable=True, fused_inner_steps="prox_steps",
-    ),
-    "svrp": AlgoSpec(
-        SVRPParams, svrp_scan,
-        defaults={"eta": _REQUIRED, "p": _REQUIRED, "smoothness": 0.0},
-        static=_PROX_STATIC, fusable=True, fused_inner_steps="prox_steps",
-    ),
-    "svrp_minibatch": AlgoSpec(
-        MinibatchParams, svrp_minibatch_scan,
-        defaults={"eta": _REQUIRED, "p": _REQUIRED, "smoothness": 0.0},
-        static={**_PROX_STATIC, "batch_clients": _REQUIRED},
-        fusable=True, fused_inner_steps="prox_steps",
-    ),
-    "catalyzed_svrp": AlgoSpec(
-        CatalyzedSVRPParams, catalyzed_svrp_scan,
-        defaults={
-            "mu": _REQUIRED, "gamma": _REQUIRED, "eta": _REQUIRED,
-            "p": _REQUIRED, "smoothness": 0.0,
-        },
-        static={
-            "num_outer": _REQUIRED, "inner_steps": _REQUIRED,
-            "prox_solver": "exact", "prox_steps": 50, "prox_tol": 1e-10,
-        },
-        fusable=True, fused_inner_steps="prox_steps",
-        fused_round_steps="inner_steps",  # per-stage round count (nested scan)
-    ),
-    "sgd": AlgoSpec(
-        SGDParams, sgd_scan,
-        defaults={"stepsize": _REQUIRED},
-        static={"num_steps": _REQUIRED},
-    ),
-    "svrg": AlgoSpec(
-        SVRGParams, svrg_scan,
-        defaults={"stepsize": _REQUIRED, "p": _REQUIRED},
-        static={"num_steps": _REQUIRED},
-    ),
-    "scaffold": AlgoSpec(
-        ScaffoldParams, scaffold_scan,
-        defaults={"local_lr": _REQUIRED, "global_lr": 1.0},
-        static={"num_rounds": _REQUIRED, "local_steps": _REQUIRED},
-    ),
-    "dane": AlgoSpec(
-        DANEParams, dane_scan,
-        defaults={"theta": _REQUIRED},
-        static={"num_rounds": _REQUIRED, "surrogate_client": 0},
-        deterministic=True,
-    ),
-    "acc_extragradient": AlgoSpec(
-        AccEGParams, acc_extragradient_scan,
-        defaults={"theta": _REQUIRED, "mu": _REQUIRED},
-        static={"num_rounds": _REQUIRED, "surrogate_client": 0},
-        deterministic=True,
-    ),
-    "composite": AlgoSpec(
-        CompositeSVRPParams, composite_svrp_scan,
-        defaults={
-            "eta": _REQUIRED, "p": _REQUIRED,
-            "smoothness": _REQUIRED, "mu": _REQUIRED,
-        },
-        # NOTE: prox_R is part of the static config and therefore of the
-        # runner cache key — pass a STABLE callable (module-level fn or one
-        # construction reused across calls); a fresh closure per call would
-        # retrace and recompile the whole sweep every time.
-        static={"num_steps": _REQUIRED, "prox_R": _REQUIRED, "prox_steps": 80},
-        requires_x_star=True,  # dist_sq must be measured to the COMPOSITE optimum
-    ),
-    "deep_svrp": AlgoSpec(
-        DeepSVRPScanParams, deep_svrp_scan,
-        defaults={"eta": _REQUIRED, "local_lr": _REQUIRED, "anchor_prob": _REQUIRED},
-        static={"num_steps": _REQUIRED, "local_steps": 4},
-        # its local solver IS Algorithm 7 (no prox_solver switch)
-        fusable=True, fused_inner_steps="local_steps",
-    ),
-}
 
 
 class BatchResult(NamedTuple):
-    """Stacked `RunResult`s for a sweep batch, plus per-trial labels."""
+    """Stacked `RunResult`s for a sweep batch, plus per-trial labels.
+
+    `stopped_round` is populated only by the early-stopping path
+    (`run_batch(..., stop_eps=...)` / `FedSession.run_until`): per trial, the
+    1-based round at which dist_sq first reached the threshold, or -1 if the
+    trial never reached it within the rounds executed.  K is then the number
+    of rounds actually run (<= the configured horizon); the trajectories are
+    the identical prefix of the full run's.
+    """
 
     dist_sq: jax.Array  # (B, K)
     comm: jax.Array  # (B, K)
     x_final: jax.Array  # (B, d)
     hparams: dict[str, np.ndarray]  # each (B,)
     seeds: np.ndarray  # (B,)
+    stopped_round: np.ndarray | None = None  # (B,) — early-stopping path only
 
     @property
     def num_trials(self) -> int:
@@ -260,44 +154,6 @@ class BatchResult(NamedTuple):
             "dist_sq_q_hi": np.percentile(d2, hi, axis=0),
             "comm_median": np.median(comm, axis=0),
         }
-
-
-def _resolve(algo: str) -> AlgoSpec:
-    if algo not in ALGOS:
-        raise KeyError(f"unknown algo {algo!r}; available: {sorted(ALGOS)}")
-    return ALGOS[algo]
-
-
-def _build_trials(
-    spec: AlgoSpec, algo: str, grid: Mapping[str, Any] | None, seeds
-) -> tuple[dict[str, np.ndarray], np.ndarray]:
-    fields = list(spec.params_cls._fields)
-    grid = dict(grid or {})
-    unknown = set(grid) - set(fields)
-    if unknown:
-        raise ValueError(f"{algo}: unknown hparams {sorted(unknown)}; fields: {fields}")
-    axes = {}
-    for name in fields:  # field order fixes the cartesian-product nesting
-        if name in grid:
-            axes[name] = grid[name]
-        elif spec.defaults[name] is _REQUIRED:
-            raise ValueError(f"{algo}: grid must provide required hparam {name!r}")
-        else:
-            axes[name] = spec.defaults[name]
-    return with_seeds(expand_grid(**axes), seeds)
-
-
-def _static_config(spec: AlgoSpec, algo: str, overrides: Mapping[str, Any]) -> dict:
-    unknown = set(overrides) - set(spec.static)
-    if unknown:
-        raise ValueError(
-            f"{algo}: unknown static config {sorted(unknown)}; accepts: {sorted(spec.static)}"
-        )
-    cfg = {**spec.static, **overrides}
-    missing = [k for k, v in cfg.items() if v is _REQUIRED]
-    if missing:
-        raise ValueError(f"{algo}: missing required static config {missing}")
-    return cfg
 
 
 def _one_trial_fn(scan_fn: Callable, static_items: tuple) -> Callable:
@@ -354,108 +210,8 @@ def _single_runner(scan_fn: Callable, static_items: tuple) -> Callable:
     return jax.jit(_one_trial_fn(scan_fn, static_items))
 
 
-def _problem_dtype(problem):
-    """The dtype the problem's own arrays carry (quadratic A / logistic Z)."""
-    for attr in ("A", "Z"):
-        if hasattr(problem, attr):
-            return getattr(problem, attr).dtype
-    return None
-
-
-def _prepare(spec: AlgoSpec, algo: str, problem, grid, seeds, static, x0, x_star,
-             stepsize=None, target_eps=1e-6, theory_constants=None):
-    """Shared entry-point preamble: trial table, static config, validation,
-    x0/x_star defaults, and theory-stepsize resolution — identical for
-    run_batch and run_sequential so the two can never drift apart."""
-    if x0 is None:
-        x0 = jnp.zeros(problem.dim, dtype=_problem_dtype(problem))
-    if x_star is None:
-        if spec.requires_x_star:
-            raise ValueError(
-                f"{algo}: pass x_star explicitly — problem.minimizer() is the "
-                "UNCONSTRAINED optimum, not this algorithm's reference point "
-                "(use e.g. composite_minimizer_pgd)"
-            )
-        if hasattr(problem, "privacy_spent"):
-            # DP-ERM validation: the wrapper's minimizer() is the PERTURBED
-            # optimum.  Utility (privacy-utility frontiers) must be measured
-            # against the base problem's minimizer; convergence studies may
-            # deliberately use the DP optimum — either way the choice has to
-            # be explicit, not an ambiguous default.
-            raise ValueError(
-                f"{algo}: DP problems need an explicit x_star — "
-                "problem.minimizer() is the NOISED optimum; pass "
-                "problem.base_problem().minimizer() to measure utility "
-                "against the non-private solution, or problem.minimizer() "
-                "to measure convergence of the private objective"
-            )
-        x_star = problem.minimizer()
-    if stepsize is not None:
-        if stepsize != "theory":
-            raise ValueError(
-                f"unknown stepsize mode {stepsize!r}; supported: 'theory' "
-                "(or pass explicit values in the grid)"
-            )
-        from repro.core.theory import theory_grid
-
-        # The caller's grid entries override the theorem-prescribed ones, so
-        # e.g. a refresh-probability sweep can ride the theory eta.  Passing
-        # theory_constants (a measured ProblemConstants) skips the per-call
-        # measurement — callers that also predict_comm measure exactly once.
-        grid = {**theory_grid(algo, problem, eps=target_eps, x0=x0,
-                              x_star=x_star, constants=theory_constants),
-                **(grid or {})}
-    hparams, seed_arr = _build_trials(spec, algo, grid, seeds)
-    cfg = _static_config(spec, algo, static)
-    if spec.deterministic and np.unique(seed_arr).size > 1:
-        raise ValueError(
-            f"{algo} ignores the PRNG key; a multi-seed axis would run "
-            "bit-identical duplicate trials. Pass seeds=1 (default)."
-        )
-    if "prox_solver" in cfg:
-        # Trace-time (solver, problem) validation: a quadratic-only solver on
-        # a logistic problem must fail HERE with a clear message, not as an
-        # attribute/shape error deep inside the vmapped scan.
-        get_prox_solver(cfg["prox_solver"], problem)
-    if cfg.get("prox_solver") == "gd":
-        if "smoothness" not in spec.params_cls._fields:
-            raise ValueError(f"{algo} does not support prox_solver='gd'")
-        if "smoothness" not in (grid or {}):
-            raise ValueError(
-                f"{algo}: prox_solver='gd' needs 'smoothness' in the grid "
-                "(Algorithm 7's stepsize is 1/(L + 1/eta); L=0 silently diverges)"
-            )
-    return hparams, seed_arr, cfg, x0, x_star
-
-
-def _keys_for(seeds: np.ndarray) -> jax.Array:
-    """(B,) typed PRNG keys; trial s reproduces jax.random.key(s) exactly."""
-    return jax.vmap(jax.random.key)(jnp.asarray(seeds, dtype=jnp.uint32))
-
-
-def _device_hparams(hparams: Mapping[str, np.ndarray]) -> dict[str, jax.Array]:
-    """Host grid arrays -> device arrays, refusing silent integer narrowing.
-
-    grid.py keeps integer axes exact as int64; without jax_enable_x64 the
-    device conversion narrows to int32, which would silently wrap the very
-    values the grid layer preserves — make that loud instead.
-    """
-    out = {}
-    for k, v in hparams.items():
-        arr = jnp.asarray(v)
-        if np.issubdtype(np.asarray(v).dtype, np.integer) and not np.array_equal(
-            np.asarray(arr, dtype=np.int64), np.asarray(v, dtype=np.int64)
-        ):
-            raise OverflowError(
-                f"integer hparam {k!r} does not fit the device integer width "
-                f"({arr.dtype}); enable jax_enable_x64 for int64 hparams"
-            )
-        out[k] = arr
-    return out
-
-
 def run_batch(
-    algo: str,
+    algo: str | RunSpec,
     problem,
     grid: Mapping[str, Any] | None = None,
     seeds: int | Sequence[int] = 1,
@@ -469,6 +225,7 @@ def run_batch(
     interpret: bool | None = None,
     shard: str | None = None,
     devices: Sequence[Any] | None = None,
+    stop_eps: float | None = None,
     **static,
 ) -> BatchResult:
     """Run `seeds x grid` trials of `algo` on `problem` in ONE jitted vmap.
@@ -502,16 +259,36 @@ def run_batch(
     masked out of the returned BatchResult, so `summary()` and per-trial
     access see exactly the requested B trials.
 
+    `stop_eps` enables early stopping: the sweep is executed on the
+    incremental session substrate (`repro.serve`) — the same jitted round
+    bodies, stepped chunk-at-a-time — and halts once EVERY trial has reached
+    `dist_sq <= stop_eps` (or the configured horizon runs out).  The returned
+    trajectories are the identical prefix of the full run's, and
+    `BatchResult.stopped_round` records each trial's first-hit round.
+
     Per-trial outputs match the sequential `run_<algo>` driver for the same
     (seed, hparams) to float tolerance — see tests/test_experiments.py and
     tests/test_sharded.py.
     """
-    spec = _resolve(algo)
-    hparams, seed_arr, cfg, x0, x_star = _prepare(
-        spec, algo, problem, grid, seeds, static, x0, x_star,
-        stepsize=stepsize, target_eps=target_eps,
-        theory_constants=theory_constants,
-    )
+    spec_ = as_runspec(algo, grid=grid, seeds=seeds, x0=x0, x_star=x_star,
+                       stepsize=stepsize, target_eps=target_eps,
+                       theory_constants=theory_constants, static=static)
+    rr = spec_.resolve(problem)
+    algo, spec = rr.algo, rr.aspec
+    hparams, seed_arr, cfg, x0, x_star = rr.hparams, rr.seeds, rr.cfg, rr.x0, rr.x_star
+
+    if stop_eps is not None:
+        if fused or shard is not None or interpret is not None or devices is not None:
+            raise ValueError(
+                "stop_eps runs on the incremental session substrate; it cannot "
+                "be combined with fused=, interpret=, shard= or devices="
+            )
+        import dataclasses
+
+        from repro.serve import open_session  # lazy: serve imports this module
+
+        sess = open_session(dataclasses.replace(spec_, substrate="batched"), problem)
+        return sess.run_until(stop_eps)
 
     hp = spec.params_cls(**_device_hparams(hparams))
     keys = _keys_for(seed_arr)
@@ -558,7 +335,7 @@ def run_batch(
 
 
 def run_sequential(
-    algo: str,
+    algo: str | RunSpec,
     problem,
     grid: Mapping[str, Any] | None = None,
     seeds: int | Sequence[int] = 1,
@@ -574,14 +351,15 @@ def run_sequential(
 
     Same trial set and per-trial numerics, one jitted call PER TRIAL — kept as
     the equivalence oracle for tests and the baseline for
-    benchmarks/sweep_bench.py.
+    benchmarks/sweep_bench.py.  Accepts the same `RunSpec` as run_batch and
+    `open_session` (or the legacy keyword style via the `as_runspec` shim).
     """
-    spec = _resolve(algo)
-    hparams, seed_arr, cfg, x0, x_star = _prepare(
-        spec, algo, problem, grid, seeds, static, x0, x_star,
-        stepsize=stepsize, target_eps=target_eps,
-        theory_constants=theory_constants,
-    )
+    spec_ = as_runspec(algo, grid=grid, seeds=seeds, x0=x0, x_star=x_star,
+                       stepsize=stepsize, target_eps=target_eps,
+                       theory_constants=theory_constants, static=static)
+    rr = spec_.resolve(problem)
+    algo, spec = rr.algo, rr.aspec
+    hparams, seed_arr, cfg, x0, x_star = rr.hparams, rr.seeds, rr.cfg, rr.x0, rr.x_star
 
     single = _single_runner(spec.scan_fn, tuple(sorted(cfg.items())))
     dev_hp = _device_hparams(hparams)

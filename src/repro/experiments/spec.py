@@ -1,0 +1,427 @@
+"""What to run: the algorithm registry and the shared `RunSpec`.
+
+Splitting "what to run" from "how to run it" is what keeps the three entry
+points — `run_batch` (one jitted vmapped scan), `run_sequential` (per-trial
+jitted loop) and `repro.serve.open_session` (incremental round stepping) —
+from drifting apart.  All three consume the SAME `RunSpec` and resolve it
+through the SAME code path (`RunSpec.resolve`), so the trial table, static
+config, x0/x_star defaults, theory-stepsize resolution and every validation
+error are identical by construction:
+
+    from repro.experiments import RunSpec, run_batch, run_sequential
+    from repro.serve import open_session
+
+    spec = RunSpec("svrp", grid={"eta": [1e-3, 3e-3], "p": 0.1},
+                   seeds=8, static={"num_steps": 2000})
+    run_batch(spec, problem)            # whole sweep, one jitted scan
+    run_sequential(spec, problem)       # same trials, one jit per trial
+    open_session(spec, problem).step(5) # same trials, 5 rounds at a time
+
+The legacy keyword style (`run_batch("svrp", problem, grid=..., num_steps=...)`)
+remains supported through ONE shim, `as_runspec`, which simply packs the
+keywords into a `RunSpec` — there is no second code path.
+
+`AlgoSpec` (how the engine drives one algorithm) and the `ALGOS` table also
+live here; `repro.experiments.runner` re-exports them unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (
+    AccEGParams,
+    DANEParams,
+    ScaffoldParams,
+    SGDParams,
+    SVRGParams,
+    acc_extragradient_scan,
+    dane_scan,
+    scaffold_scan,
+    sgd_scan,
+    svrg_scan,
+)
+from repro.core.catalyst import CatalyzedSVRPParams, catalyzed_svrp_scan
+from repro.core.composite import CompositeSVRPParams, composite_svrp_scan
+from repro.core.deep import DeepSVRPScanParams, deep_svrp_scan
+from repro.core.minibatch import MinibatchParams, svrp_minibatch_scan
+from repro.core.prox import get_prox_solver
+from repro.core.sppm import SPPMParams, sppm_scan
+from repro.core.svrp import SVRPParams, svrp_scan
+from repro.core.types import RunResult
+from repro.experiments.grid import expand_grid, with_seeds
+
+_REQUIRED = object()
+
+
+@dataclass(frozen=True)
+class AlgoSpec:
+    """How the engine drives one algorithm.
+
+    `defaults` maps every hparam field of `params_cls` to its default value
+    (`_REQUIRED` = the caller's grid must provide it); `static` maps every
+    static-config kwarg of `scan_fn` likewise.
+    """
+
+    params_cls: type
+    scan_fn: Callable[..., RunResult]
+    defaults: Mapping[str, Any]
+    static: Mapping[str, Any]
+    fusable: bool = False  # runs on the fused substrate (rounds.batched_scan)
+    # Which static-config key supplies the fused path's Algorithm-7 inner step
+    # count ("prox_steps" for registry-prox algos, "local_steps" for
+    # DeepSVRP's explicit-stepsize local loop).  Declared here so the fused
+    # driver can never pick the wrong inner-step count for a new algo.
+    fused_inner_steps: str | None = None
+    # Which static-config key supplies the fused scan's ROUND count per
+    # trajectory segment ("inner_steps" for Catalyst's nested stages).
+    fused_round_steps: str = "num_steps"
+    deterministic: bool = False  # ignores the PRNG key; run_batch rejects multi-seed sweeps
+    requires_x_star: bool = False  # problem.minimizer() is NOT the right reference point
+
+
+_PROX_STATIC = {
+    "num_steps": _REQUIRED,
+    "prox_solver": "exact",
+    "prox_steps": 50,
+    "prox_tol": 1e-10,
+}
+
+ALGOS: dict[str, AlgoSpec] = {
+    "sppm": AlgoSpec(
+        SPPMParams, sppm_scan,
+        defaults={"eta": _REQUIRED, "smoothness": 0.0},
+        static=_PROX_STATIC, fusable=True, fused_inner_steps="prox_steps",
+    ),
+    "svrp": AlgoSpec(
+        SVRPParams, svrp_scan,
+        defaults={"eta": _REQUIRED, "p": _REQUIRED, "smoothness": 0.0},
+        static=_PROX_STATIC, fusable=True, fused_inner_steps="prox_steps",
+    ),
+    "svrp_minibatch": AlgoSpec(
+        MinibatchParams, svrp_minibatch_scan,
+        defaults={"eta": _REQUIRED, "p": _REQUIRED, "smoothness": 0.0},
+        static={**_PROX_STATIC, "batch_clients": _REQUIRED},
+        fusable=True, fused_inner_steps="prox_steps",
+    ),
+    "catalyzed_svrp": AlgoSpec(
+        CatalyzedSVRPParams, catalyzed_svrp_scan,
+        defaults={
+            "mu": _REQUIRED, "gamma": _REQUIRED, "eta": _REQUIRED,
+            "p": _REQUIRED, "smoothness": 0.0,
+        },
+        static={
+            "num_outer": _REQUIRED, "inner_steps": _REQUIRED,
+            "prox_solver": "exact", "prox_steps": 50, "prox_tol": 1e-10,
+        },
+        fusable=True, fused_inner_steps="prox_steps",
+        fused_round_steps="inner_steps",  # per-stage round count (nested scan)
+    ),
+    "sgd": AlgoSpec(
+        SGDParams, sgd_scan,
+        defaults={"stepsize": _REQUIRED},
+        static={"num_steps": _REQUIRED},
+    ),
+    "svrg": AlgoSpec(
+        SVRGParams, svrg_scan,
+        defaults={"stepsize": _REQUIRED, "p": _REQUIRED},
+        static={"num_steps": _REQUIRED},
+    ),
+    "scaffold": AlgoSpec(
+        ScaffoldParams, scaffold_scan,
+        defaults={"local_lr": _REQUIRED, "global_lr": 1.0},
+        static={"num_rounds": _REQUIRED, "local_steps": _REQUIRED},
+    ),
+    "dane": AlgoSpec(
+        DANEParams, dane_scan,
+        defaults={"theta": _REQUIRED},
+        static={"num_rounds": _REQUIRED, "surrogate_client": 0},
+        deterministic=True,
+    ),
+    "acc_extragradient": AlgoSpec(
+        AccEGParams, acc_extragradient_scan,
+        defaults={"theta": _REQUIRED, "mu": _REQUIRED},
+        static={"num_rounds": _REQUIRED, "surrogate_client": 0},
+        deterministic=True,
+    ),
+    "composite": AlgoSpec(
+        CompositeSVRPParams, composite_svrp_scan,
+        defaults={
+            "eta": _REQUIRED, "p": _REQUIRED,
+            "smoothness": _REQUIRED, "mu": _REQUIRED,
+        },
+        # NOTE: prox_R is part of the static config and therefore of the
+        # runner cache key — pass a STABLE callable (module-level fn or one
+        # construction reused across calls); a fresh closure per call would
+        # retrace and recompile the whole sweep every time.
+        static={"num_steps": _REQUIRED, "prox_R": _REQUIRED, "prox_steps": 80},
+        requires_x_star=True,  # dist_sq must be measured to the COMPOSITE optimum
+    ),
+    "deep_svrp": AlgoSpec(
+        DeepSVRPScanParams, deep_svrp_scan,
+        defaults={"eta": _REQUIRED, "local_lr": _REQUIRED, "anchor_prob": _REQUIRED},
+        static={"num_steps": _REQUIRED, "local_steps": 4},
+        # its local solver IS Algorithm 7 (no prox_solver switch)
+        fusable=True, fused_inner_steps="local_steps",
+    ),
+}
+
+
+# ---------------------------------------------------------------- substrates
+_SESSION_SUBSTRATES = ("sequential", "batched")
+
+
+def check_substrate(substrate: str) -> str:
+    """Validate a session-substrate name.  ONE function so run_batch,
+    run_sequential and open_session raise the identical error text."""
+    if substrate not in _SESSION_SUBSTRATES:
+        raise ValueError(
+            f"unknown substrate {substrate!r}; supported: 'sequential', 'batched'"
+        )
+    return substrate
+
+
+def horizon_rounds(cfg: Mapping[str, Any]) -> int:
+    """The total round count a resolved static config prescribes — the fixed
+    horizon the session layer builds its key schedule for (PRNG `split` is not
+    prefix-stable, so the schedule cannot be lazily extended)."""
+    if "num_outer" in cfg:
+        return int(cfg["num_outer"]) * int(cfg["inner_steps"])
+    return int(cfg["num_steps"] if "num_steps" in cfg else cfg["num_rounds"])
+
+
+# ------------------------------------------------------------------- RunSpec
+class ResolvedRun(NamedTuple):
+    """A `RunSpec` bound to a problem: everything the substrates consume."""
+
+    algo: str
+    aspec: AlgoSpec
+    hparams: dict[str, np.ndarray]  # host trial table, each (B,)
+    seeds: np.ndarray  # (B,)
+    cfg: dict[str, Any]  # full static config (defaults merged, validated)
+    x0: jax.Array
+    x_star: jax.Array
+
+    def device_hparams(self):
+        return self.aspec.params_cls(**_device_hparams(self.hparams))
+
+    def keys(self) -> jax.Array:
+        return _keys_for(self.seeds)
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """One sweep, independent of how it is executed.
+
+    Consumed as-is by all three entry points: `run_batch(spec, problem)`,
+    `run_sequential(spec, problem)` and `repro.serve.open_session(spec,
+    problem)`.  `static` carries the algorithm's static config (num_steps,
+    prox_solver, ...) that the legacy keyword style passes as trailing
+    `**kwargs`.  `substrate` picks the session substrate ("sequential" or
+    "batched"); it is consumed by `open_session` and validated (same error
+    text) by the other two, which execute on their own substrate regardless.
+    """
+
+    algo: str
+    grid: Mapping[str, Any] | None = None
+    seeds: int | Sequence[int] = 1
+    x0: jax.Array | None = None
+    x_star: jax.Array | None = None
+    stepsize: str | None = None
+    target_eps: float = 1e-6
+    theory_constants: Any = None
+    substrate: str | None = None
+    static: Mapping[str, Any] = field(default_factory=dict)
+
+    def resolve(self, problem) -> ResolvedRun:
+        """Bind to a problem: trial table, static config, validation, x0/x_star
+        defaults and theory-stepsize resolution — shared by every entry point
+        so they can never drift apart."""
+        aspec = resolve_algo(self.algo)
+        if self.substrate is not None:
+            check_substrate(self.substrate)
+        algo, grid, x0, x_star = self.algo, self.grid, self.x0, self.x_star
+        if x0 is None:
+            x0 = jnp.zeros(problem.dim, dtype=_problem_dtype(problem))
+        if x_star is None:
+            if aspec.requires_x_star:
+                raise ValueError(
+                    f"{algo}: pass x_star explicitly — problem.minimizer() is the "
+                    "UNCONSTRAINED optimum, not this algorithm's reference point "
+                    "(use e.g. composite_minimizer_pgd)"
+                )
+            if hasattr(problem, "privacy_spent"):
+                # DP-ERM validation: the wrapper's minimizer() is the PERTURBED
+                # optimum.  Utility (privacy-utility frontiers) must be measured
+                # against the base problem's minimizer; convergence studies may
+                # deliberately use the DP optimum — either way the choice has to
+                # be explicit, not an ambiguous default.
+                raise ValueError(
+                    f"{algo}: DP problems need an explicit x_star — "
+                    "problem.minimizer() is the NOISED optimum; pass "
+                    "problem.base_problem().minimizer() to measure utility "
+                    "against the non-private solution, or problem.minimizer() "
+                    "to measure convergence of the private objective"
+                )
+            x_star = problem.minimizer()
+        if self.stepsize is not None:
+            if self.stepsize != "theory":
+                raise ValueError(
+                    f"unknown stepsize mode {self.stepsize!r}; supported: 'theory' "
+                    "(or pass explicit values in the grid)"
+                )
+            from repro.core.theory import theory_grid
+
+            # The caller's grid entries override the theorem-prescribed ones, so
+            # e.g. a refresh-probability sweep can ride the theory eta.  Passing
+            # theory_constants (a measured ProblemConstants) skips the per-call
+            # measurement — callers that also predict_comm measure exactly once.
+            grid = {**theory_grid(algo, problem, eps=self.target_eps, x0=x0,
+                                  x_star=x_star, constants=self.theory_constants),
+                    **(grid or {})}
+        hparams, seed_arr = _build_trials(aspec, algo, grid, self.seeds)
+        cfg = _static_config(aspec, algo, self.static)
+        if aspec.deterministic and np.unique(seed_arr).size > 1:
+            raise ValueError(
+                f"{algo} ignores the PRNG key; a multi-seed axis would run "
+                "bit-identical duplicate trials. Pass seeds=1 (default)."
+            )
+        if "prox_solver" in cfg:
+            # Trace-time (solver, problem) validation: a quadratic-only solver on
+            # a logistic problem must fail HERE with a clear message, not as an
+            # attribute/shape error deep inside the vmapped scan.
+            get_prox_solver(cfg["prox_solver"], problem)
+        if cfg.get("prox_solver") == "gd":
+            if "smoothness" not in aspec.params_cls._fields:
+                raise ValueError(f"{algo} does not support prox_solver='gd'")
+            if "smoothness" not in (grid or {}):
+                raise ValueError(
+                    f"{algo}: prox_solver='gd' needs 'smoothness' in the grid "
+                    "(Algorithm 7's stepsize is 1/(L + 1/eta); L=0 silently diverges)"
+                )
+        return ResolvedRun(algo, aspec, hparams, seed_arr, cfg, x0, x_star)
+
+
+def as_runspec(
+    algo: str | RunSpec,
+    *,
+    grid: Mapping[str, Any] | None = None,
+    seeds: int | Sequence[int] = 1,
+    x0: jax.Array | None = None,
+    x_star: jax.Array | None = None,
+    stepsize: str | None = None,
+    target_eps: float = 1e-6,
+    theory_constants: Any = None,
+    substrate: str | None = None,
+    static: Mapping[str, Any] | None = None,
+) -> RunSpec:
+    """THE legacy-kwargs shim: `run_batch("svrp", problem, grid=...,
+    num_steps=...)` packs its keywords through here into a `RunSpec`.
+
+    When the caller already passes a `RunSpec` as `algo`, every run option
+    must live on the spec — mixing the two styles is rejected rather than
+    silently merged."""
+    if isinstance(algo, RunSpec):
+        clashes = [
+            name
+            for name, val in (
+                ("grid", grid), ("x0", x0), ("x_star", x_star),
+                ("stepsize", stepsize), ("theory_constants", theory_constants),
+                ("substrate", substrate),
+            )
+            if val is not None
+        ]
+        if seeds != 1:
+            clashes.append("seeds")
+        if target_eps != 1e-6:
+            clashes.append("target_eps")
+        if static:
+            clashes.append("static config")
+        if clashes:
+            raise ValueError(
+                f"got both a RunSpec and keyword run options {clashes}; "
+                "put run options on the RunSpec itself"
+            )
+        return algo
+    return RunSpec(
+        algo=algo, grid=grid, seeds=seeds, x0=x0, x_star=x_star,
+        stepsize=stepsize, target_eps=target_eps,
+        theory_constants=theory_constants, substrate=substrate,
+        static=dict(static or {}),
+    )
+
+
+def resolve_algo(algo: str) -> AlgoSpec:
+    if algo not in ALGOS:
+        raise KeyError(f"unknown algo {algo!r}; available: {sorted(ALGOS)}")
+    return ALGOS[algo]
+
+
+def _build_trials(
+    spec: AlgoSpec, algo: str, grid: Mapping[str, Any] | None, seeds
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    fields = list(spec.params_cls._fields)
+    grid = dict(grid or {})
+    unknown = set(grid) - set(fields)
+    if unknown:
+        raise ValueError(f"{algo}: unknown hparams {sorted(unknown)}; fields: {fields}")
+    axes = {}
+    for name in fields:  # field order fixes the cartesian-product nesting
+        if name in grid:
+            axes[name] = grid[name]
+        elif spec.defaults[name] is _REQUIRED:
+            raise ValueError(f"{algo}: grid must provide required hparam {name!r}")
+        else:
+            axes[name] = spec.defaults[name]
+    return with_seeds(expand_grid(**axes), seeds)
+
+
+def _static_config(spec: AlgoSpec, algo: str, overrides: Mapping[str, Any]) -> dict:
+    unknown = set(overrides) - set(spec.static)
+    if unknown:
+        raise ValueError(
+            f"{algo}: unknown static config {sorted(unknown)}; accepts: {sorted(spec.static)}"
+        )
+    cfg = {**spec.static, **overrides}
+    missing = [k for k, v in cfg.items() if v is _REQUIRED]
+    if missing:
+        raise ValueError(f"{algo}: missing required static config {missing}")
+    return cfg
+
+
+def _problem_dtype(problem):
+    """The dtype the problem's own arrays carry (quadratic A / logistic Z)."""
+    for attr in ("A", "Z"):
+        if hasattr(problem, attr):
+            return getattr(problem, attr).dtype
+    return None
+
+
+def _keys_for(seeds: np.ndarray) -> jax.Array:
+    """(B,) typed PRNG keys; trial s reproduces jax.random.key(s) exactly."""
+    return jax.vmap(jax.random.key)(jnp.asarray(seeds, dtype=jnp.uint32))
+
+
+def _device_hparams(hparams: Mapping[str, np.ndarray]) -> dict[str, jax.Array]:
+    """Host grid arrays -> device arrays, refusing silent integer narrowing.
+
+    grid.py keeps integer axes exact as int64; without jax_enable_x64 the
+    device conversion narrows to int32, which would silently wrap the very
+    values the grid layer preserves — make that loud instead.
+    """
+    out = {}
+    for k, v in hparams.items():
+        arr = jnp.asarray(v)
+        if np.issubdtype(np.asarray(v).dtype, np.integer) and not np.array_equal(
+            np.asarray(arr, dtype=np.int64), np.asarray(v, dtype=np.int64)
+        ):
+            raise OverflowError(
+                f"integer hparam {k!r} does not fit the device integer width "
+                f"({arr.dtype}); enable jax_enable_x64 for int64 hparams"
+            )
+        out[k] = arr
+    return out

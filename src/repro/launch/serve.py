@@ -1,5 +1,10 @@
 """Batched serving engine: static batching over the per-family decode paths.
 
+This is the model DECODE server (token generation for the transformer
+workload).  The federated ROUND server — continuous optimization rounds over
+a churning client stream — is `repro.serve.FedRoundServer`; the two share
+nothing but the word "serve" (examples/serve.py demos both side by side).
+
     server = BatchServer(cfg, params, max_batch=8, cache_len=256, quantize=True)
     outputs = server.generate(prompts, max_new_tokens=32)
 

@@ -1,0 +1,27 @@
+"""Online round engine: incremental sessions + streaming federated serving.
+
+Two layers over the SAME single-round bodies the scan substrates execute
+(`repro.core.rounds.ROUND_DEFS` + the per-algorithm `*_step_def` builders):
+
+* `open_session` / `FedSession` — a sweep held open: `session.step(n)` runs n
+  rounds of every trial with device-resident state, `session.run_until(eps)`
+  early-stops; k incremental rounds == the first k columns of `run_batch`.
+* `FedRoundServer` / `ClientStream` / `ServeStats` — a streaming simulation:
+  clients churn on a stream, cohorts form on the fly from resident clients,
+  rounds run continuously with pipelined stats readback (rounds/sec,
+  p50/p95/p99 round latency, dist-to-opt over wall-clock).
+
+Not to be confused with `repro.launch.serve`, the model-decode batch server.
+"""
+from repro.serve.server import ClientStream, FedRoundServer
+from repro.serve.session import FedSession, open_session, trial_step_def
+from repro.serve.stats import ServeStats
+
+__all__ = [
+    "ClientStream",
+    "FedRoundServer",
+    "FedSession",
+    "ServeStats",
+    "open_session",
+    "trial_step_def",
+]

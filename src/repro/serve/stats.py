@@ -1,0 +1,93 @@
+"""Streaming run statistics for the federated round server.
+
+`ServeStats` accumulates one record per completed round — wall-clock latency,
+elapsed time since the run started, the server's dist-to-opt and cumulative
+communication — and summarizes them the way a serving dashboard would:
+throughput (rounds/sec) plus p50/p95/p99 round-latency percentiles, and the
+dist-to-opt-over-wall-clock trace the paper's comm-complexity plots become in
+an online setting.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ServeStats:
+    """Per-round latency/progress accumulator for `FedRoundServer.run`."""
+
+    def __init__(self) -> None:
+        self.latencies_s: list[float] = []  # dispatch -> result, per round
+        self.elapsed_s: list[float] = []  # run start -> result, per round
+        self.dist_sq: list[float] = []  # server dist-to-opt after the round
+        self.comm: list[int] = []  # cumulative communication steps
+
+    def record(
+        self, latency_s: float, elapsed_s: float, dist_sq: float, comm: int
+    ) -> None:
+        self.latencies_s.append(float(latency_s))
+        self.elapsed_s.append(float(elapsed_s))
+        self.dist_sq.append(float(dist_sq))
+        self.comm.append(int(comm))
+
+    @property
+    def rounds(self) -> int:
+        return len(self.latencies_s)
+
+    def latency_percentiles_ms(self) -> dict[str, float]:
+        if not self.latencies_s:
+            return {"p50_ms": float("nan"), "p95_ms": float("nan"), "p99_ms": float("nan")}
+        lat = np.asarray(self.latencies_s) * 1e3
+        return {
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p95_ms": float(np.percentile(lat, 95)),
+            "p99_ms": float(np.percentile(lat, 99)),
+        }
+
+    def summary(self) -> dict[str, float]:
+        """Rounds/sec + latency percentiles + final progress, JSON-friendly."""
+        out = {"rounds": self.rounds, **self.latency_percentiles_ms()}
+        if self.rounds:
+            total = self.elapsed_s[-1]
+            out["rounds_per_sec"] = self.rounds / total if total > 0 else float("inf")
+            out["final_dist_sq"] = self.dist_sq[-1]
+            out["total_comm"] = self.comm[-1]
+        else:
+            out["rounds_per_sec"] = float("nan")
+            out["final_dist_sq"] = float("nan")
+            out["total_comm"] = 0
+        return out
+
+    def trace(self) -> np.ndarray:
+        """(rounds, 3) [elapsed_s, dist_sq, comm] — dist-to-opt over wall-clock."""
+        return np.column_stack(
+            [
+                np.asarray(self.elapsed_s, dtype=np.float64),
+                np.asarray(self.dist_sq, dtype=np.float64),
+                np.asarray(self.comm, dtype=np.float64),
+            ]
+        ) if self.rounds else np.zeros((0, 3))
+
+    def report(self) -> str:
+        s = self.summary()
+        return (
+            f"rounds={s['rounds']}  rounds/sec={s['rounds_per_sec']:.1f}  "
+            f"latency p50={s['p50_ms']:.2f}ms p95={s['p95_ms']:.2f}ms "
+            f"p99={s['p99_ms']:.2f}ms  final dist^2={s['final_dist_sq']:.3e}  "
+            f"comm={s['total_comm']}"
+        )
+
+    def markdown(self, title: str = "Federated round server") -> str:
+        """A `$GITHUB_STEP_SUMMARY`-ready table (CI quickstart job)."""
+        s = self.summary()
+        return "\n".join(
+            [
+                f"### {title}",
+                "",
+                "| rounds | rounds/sec | p50 (ms) | p95 (ms) | p99 (ms) | final dist^2 | comm |",
+                "|---:|---:|---:|---:|---:|---:|---:|",
+                f"| {s['rounds']} | {s['rounds_per_sec']:.1f} | {s['p50_ms']:.2f} "
+                f"| {s['p95_ms']:.2f} | {s['p99_ms']:.2f} "
+                f"| {s['final_dist_sq']:.3e} | {s['total_comm']} |",
+                "",
+            ]
+        )

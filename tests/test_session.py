@@ -1,0 +1,317 @@
+"""Online round engine: the incremental FedSession + streaming server suite.
+
+The session layer (`repro.serve`) holds a sweep open and steps it round by
+round over the SAME single-round bodies the scan substrates execute.  This
+suite is the gate that keeps the incremental and scan executions
+interchangeable — for EVERY `ALGOS` entry, on BOTH session substrates:
+
+    k `session.step()` calls  ==  first k columns of the `run_batch` scan
+
+to <= 1e-5 with the Section-4.2 communication accounting integer- and
+dtype-EXACT, stepped in deliberately uneven chunks so chunk boundaries cross
+anchor refreshes and catalyst stage boundaries.  On top of that contract:
+
+* `run_until(eps)` / `run_batch(stop_eps=...)` — the early-stopped trajectory
+  is a prefix of the full run, and `BatchResult.stopped_round` records the
+  1-based first-hit round per trial.
+* API unification — `RunSpec` is consumed identically by `run_batch`,
+  `run_sequential` and `open_session`; unknown static config, bad substrates
+  and RunSpec-plus-kwargs clashes raise the IDENTICAL ValueError text from
+  all three entry points.
+* Serve loop — `FedRoundServer` sustains continuous rounds over a churning
+  `ClientStream` with monotone comm, real progress (variance-reduced algos),
+  and populated latency percentiles.
+
+A new ALGOS entry fails `test_every_algo_has_a_case` until wired in here.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    catalyst_inner_iterations,
+    composite_minimizer_pgd,
+    prox_l2ball,
+    theorem2_stepsize,
+    theorem3_gamma,
+)
+from repro.experiments import ALGOS, RunSpec, run_batch, run_sequential
+from repro.problems import make_synthetic_quadratic
+from repro.serve import ClientStream, FedRoundServer, open_session
+
+M = 10
+SEEDS = 2
+SUBSTRATES = ("sequential", "batched")
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_synthetic_quadratic(num_clients=M, dim=6, mu=1.0, L=80.0,
+                                    delta=4.0, seed=1)
+
+
+@pytest.fixture(scope="module")
+def cases(prob):
+    """Per-algorithm sweep configs shared by session and run_batch."""
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    dmax = float(prob.similarity_max())
+    L = float(prob.smoothness_max())
+    eta = theorem2_stepsize(mu, delta)
+    gamma = max(theorem3_gamma(mu, delta, M), 0.5)
+    inner = min(catalyst_inner_iterations(mu, delta, M), 12)
+    eta_in = theorem2_stepsize(mu + gamma, delta)
+    beta_deep = 0.8 / (L + 2.0)
+    prox_R = prox_l2ball(0.1)
+    x_star_c = composite_minimizer_pgd(
+        prob, prox_R, L=float(prob.smoothness()), num_steps=20_000
+    )
+    return {
+        "sppm": dict(grid={"eta": [0.05, 0.1]}, seeds=SEEDS, num_steps=12),
+        "svrp": dict(grid={"eta": [eta, eta / 2], "p": 0.2}, seeds=SEEDS,
+                     num_steps=12),
+        "svrp_minibatch": dict(grid={"eta": 3 * eta, "p": 0.25}, seeds=SEEDS,
+                               num_steps=12, batch_clients=3),
+        "catalyzed_svrp": dict(
+            grid={"mu": mu, "gamma": gamma, "eta": eta_in, "p": 1 / M},
+            seeds=SEEDS, num_outer=2, inner_steps=inner),
+        "deep_svrp": dict(
+            grid={"eta": 0.5, "local_lr": beta_deep, "anchor_prob": 0.25},
+            seeds=SEEDS, num_steps=12, local_steps=4),
+        "sgd": dict(grid={"stepsize": 1 / (3 * L)}, seeds=SEEDS, num_steps=12),
+        "svrg": dict(grid={"stepsize": 1 / (6 * L), "p": 0.2}, seeds=SEEDS,
+                     num_steps=12),
+        "scaffold": dict(grid={"local_lr": 1 / (4 * L)}, seeds=SEEDS,
+                         num_rounds=12, local_steps=4),
+        "dane": dict(grid={"theta": dmax}, num_rounds=8),
+        "acc_extragradient": dict(grid={"theta": dmax, "mu": mu}, num_rounds=8),
+        "composite": dict(
+            grid={"eta": [eta, eta / 2], "p": 0.2, "smoothness": L, "mu": mu},
+            seeds=SEEDS, num_steps=12, prox_R=prox_R, x_star=x_star_c),
+    }
+
+
+def test_every_algo_has_a_case(cases):
+    """A new ALGOS entry must be wired into this suite to land."""
+    assert set(cases) == set(ALGOS)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole contract: k incremental steps == first k columns of the scan.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("substrate", SUBSTRATES)
+@pytest.mark.parametrize("algo", sorted(ALGOS))
+def test_session_matches_run_batch(algo, substrate, prob, cases):
+    kw = cases[algo]
+    ref = run_batch(algo, prob, **kw)
+    sess = open_session(algo, prob, substrate=substrate, **kw)
+    horizon = sess.horizon
+    assert ref.dist_sq.shape == (sess.num_trials, horizon)
+
+    # Uneven chunks: a prime-ish first chunk so boundaries land mid-stage.
+    k1 = max(1, horizon // 3)
+    d2a, comm_a = sess.step(k1)
+    assert d2a.shape == (sess.num_trials, k1)
+    sess.step(horizon - k1)
+    assert sess.t == horizon
+
+    np.testing.assert_allclose(
+        np.asarray(sess.dist_sq), np.asarray(ref.dist_sq), rtol=1e-5, atol=1e-24
+    )
+    np.testing.assert_array_equal(np.asarray(sess.comm), np.asarray(ref.comm))
+    assert sess.comm.dtype == ref.comm.dtype
+    np.testing.assert_allclose(
+        np.asarray(comm_a), np.asarray(ref.comm)[:, :k1], rtol=0
+    )
+    np.testing.assert_allclose(
+        np.asarray(sess.x()), np.asarray(ref.x_final), rtol=1e-5, atol=1e-12
+    )
+    res = sess.result()
+    assert res.labels() == ref.labels()
+
+    with pytest.raises(ValueError, match="horizon"):
+        sess.step()
+
+
+def test_session_prefix_is_stable(prob, cases):
+    """Stepping 1-at-a-time equals stepping all-at-once (the key schedule is
+    materialized at open, so chunking can never change the trajectory)."""
+    kw = cases["svrp"]
+    a = open_session("svrp", prob, **kw)
+    b = open_session("svrp", prob, **kw)
+    for _ in range(a.horizon):
+        a.step(1)
+    b.step(b.horizon)
+    np.testing.assert_array_equal(np.asarray(a.dist_sq), np.asarray(b.dist_sq))
+    np.testing.assert_array_equal(np.asarray(a.comm), np.asarray(b.comm))
+
+
+# ---------------------------------------------------------------------------
+# Early stopping: run_until / run_batch(stop_eps=...).
+# ---------------------------------------------------------------------------
+
+def test_stop_eps_is_a_prefix_with_stopped_rounds(prob):
+    eta = theorem2_stepsize(1.0, float(prob.similarity()))
+    kw = dict(grid={"eta": eta, "p": 0.2}, seeds=3, num_steps=400)
+    full = run_batch("svrp", prob, **kw)
+    eps = 1e-10
+    stopped = run_batch("svrp", prob, stop_eps=eps, **kw)
+
+    k = stopped.dist_sq.shape[1]
+    assert 0 < k < 400
+    np.testing.assert_allclose(
+        np.asarray(stopped.dist_sq), np.asarray(full.dist_sq)[:, :k],
+        rtol=1e-5, atol=1e-24,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(stopped.comm), np.asarray(full.comm)[:, :k]
+    )
+    sr = stopped.stopped_round
+    assert sr is not None and sr.shape == (3,)
+    assert (sr >= 1).all() and (sr <= k).all()
+    d2 = np.asarray(stopped.dist_sq)
+    for i in range(3):
+        assert d2[i, sr[i] - 1] <= eps
+        assert (d2[i, : sr[i] - 1] > eps).all()
+    assert full.stopped_round is None
+
+
+def test_stop_eps_never_hit_runs_full_horizon(prob):
+    res = run_batch("sppm", prob, grid={"eta": 0.05}, seeds=2, num_steps=10,
+                    stop_eps=1e-30)
+    assert res.dist_sq.shape[1] == 10
+    np.testing.assert_array_equal(res.stopped_round, [-1, -1])
+
+
+def test_stop_eps_rejects_other_substrates(prob):
+    with pytest.raises(ValueError, match="stop_eps"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.2}, num_steps=10,
+                  stop_eps=1e-8, fused=True)
+
+
+# ---------------------------------------------------------------------------
+# API unification: one RunSpec, three entry points, identical errors.
+# ---------------------------------------------------------------------------
+
+def test_runspec_consumed_by_all_three_entry_points(prob, cases):
+    spec = RunSpec("svrp", grid=cases["svrp"]["grid"], seeds=SEEDS,
+                   static={"num_steps": 12})
+    rb = run_batch(spec, prob)
+    rs = run_sequential(spec, prob)
+    sess = open_session(spec, prob)
+    sess.step(sess.horizon)
+    np.testing.assert_allclose(np.asarray(rb.dist_sq), np.asarray(rs.dist_sq),
+                               rtol=1e-5, atol=1e-24)
+    np.testing.assert_allclose(np.asarray(sess.dist_sq), np.asarray(rb.dist_sq),
+                               rtol=1e-5, atol=1e-24)
+    np.testing.assert_array_equal(np.asarray(sess.comm), np.asarray(rb.comm))
+    assert sess.result().labels() == rb.labels() == rs.labels()
+
+
+def _error_text(fn):
+    with pytest.raises((ValueError, KeyError)) as e:
+        fn()
+    return str(e.value)
+
+
+@pytest.mark.parametrize("bad_call", ["unknown_static", "bad_substrate",
+                                      "spec_kwarg_clash", "unknown_algo",
+                                      "unknown_hparam"])
+def test_identical_error_text_across_entry_points(bad_call, prob):
+    """The three entry points share one resolution path, so every validation
+    failure produces byte-identical error text from all of them."""
+    good = dict(grid={"eta": 0.1, "p": 0.2}, num_steps=10)
+    calls = {
+        "unknown_static": lambda entry: entry(
+            "svrp", prob, grid={"eta": 0.1, "p": 0.2}, num_steps=10, bogus=1),
+        "bad_substrate": lambda entry: entry(
+            RunSpec("svrp", grid=good["grid"], substrate="turbo",
+                    static={"num_steps": 10}), prob),
+        "spec_kwarg_clash": lambda entry: entry(
+            RunSpec("svrp", grid=good["grid"], static={"num_steps": 10}),
+            prob, grid={"eta": 0.2}),
+        "unknown_algo": lambda entry: entry("svrq", prob, **good),
+        "unknown_hparam": lambda entry: entry(
+            "svrp", prob, grid={"eta": 0.1, "p": 0.2, "zeta": 1}, num_steps=10),
+    }
+    texts = [
+        _error_text(lambda: calls[bad_call](entry))
+        for entry in (
+            run_batch,
+            run_sequential,
+            lambda *a, **k: open_session(*a, **k),
+        )
+    ]
+    assert texts[0] == texts[1] == texts[2]
+    assert texts[0]  # non-empty
+
+
+def test_run_batch_rejects_session_substrate_on_spec(prob):
+    """A RunSpec carrying substrate= routes scan entry points through
+    check_substrate too — a typo'd substrate fails identically everywhere."""
+    spec = RunSpec("svrp", grid={"eta": 0.1, "p": 0.2}, substrate="sequential",
+                   static={"num_steps": 10})
+    sess = open_session(spec, prob)
+    assert sess.substrate == "sequential"
+
+
+# ---------------------------------------------------------------------------
+# Serve loop: continuous rounds over a churning client stream.
+# ---------------------------------------------------------------------------
+
+def test_client_stream_honors_min_resident():
+    stream = ClientStream(M, churn=0.9, min_resident=4, seed=0)
+    for _ in range(50):
+        mask = stream.tick()
+        assert mask.shape == (M,) and mask.sum() >= 4
+
+
+def test_serve_loop_progress_and_latency(prob):
+    eta = theorem2_stepsize(1.0, float(prob.similarity()))
+    srv = FedRoundServer("svrp", prob, hparams={"eta": eta, "p": 0.2}, seed=0)
+    stats = srv.run(60)
+    s = stats.summary()
+    assert s["rounds"] == 60 and srv.rounds_done == 60
+    assert np.isfinite([s["p50_ms"], s["p95_ms"], s["p99_ms"]]).all()
+    d0 = float(jnp.sum((srv.x * 0 - prob.minimizer()) ** 2))
+    # Variance-reduced, so real progress (not just a noise ball) despite churn.
+    assert s["final_dist_sq"] < 1e-2 * d0
+    assert np.all(np.diff(stats.comm) >= 0) and s["total_comm"] > 0
+    assert stats.trace().shape == (60, 3)
+    # Repeated run() continues the same trajectory: fresh fold_in keys.
+    stats2 = srv.run(10)
+    assert srv.rounds_done == 70 and stats2.rounds == 70
+
+
+def test_serve_loop_minibatch_cohorts(prob):
+    eta = theorem2_stepsize(1.0, float(prob.similarity()))
+    stream = ClientStream(M, churn=0.2, min_resident=5, seed=3)
+    srv = FedRoundServer("svrp_minibatch", prob,
+                         hparams={"eta": 3 * eta, "p": 0.25},
+                         batch_clients=3, stream=stream, seed=1)
+    s = srv.run(40).summary()
+    assert s["rounds"] == 40 and np.isfinite(s["final_dist_sq"])
+    assert s["final_dist_sq"] < 1e-4
+
+
+def test_serve_errors(prob):
+    with pytest.raises(ValueError, match="rounds-defined"):
+        FedRoundServer("sgd", prob, hparams={"stepsize": 0.1})
+    with pytest.raises(ValueError, match="batch_clients"):
+        FedRoundServer("svrp_minibatch", prob, hparams={"eta": 0.1, "p": 0.2})
+    with pytest.raises(ValueError, match="min_resident"):
+        FedRoundServer("svrp_minibatch", prob, hparams={"eta": 0.1, "p": 0.2},
+                       batch_clients=8, stream=ClientStream(M, min_resident=3))
+    with pytest.raises(ValueError, match="required hparam"):
+        FedRoundServer("svrp", prob, hparams={"eta": 0.1})
+    with pytest.raises(ValueError, match="unknown hparams"):
+        FedRoundServer("svrp", prob, hparams={"eta": 0.1, "p": 0.2, "bogus": 1})
+
+
+def test_runspec_is_frozen():
+    spec = RunSpec("svrp", grid={"eta": 0.1, "p": 0.2}, static={"num_steps": 5})
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.algo = "sppm"
