@@ -1,4 +1,8 @@
-"""Round-step substrate layer: every algorithm defined ONCE, executed three ways.
+"""Round-step substrate layer: every algorithm defined ONCE, executed four ways.
+
+The substrate contract (equivalence guarantees, which tests hold which seam)
+is documented in docs/ARCHITECTURE.md; the client-sharded collective model in
+docs/SCALING.md.
 
 The whole SPPM/SVRP family in this repo is one shape — sample a cohort, solve
 a local prox, maybe refresh the anchor, account communication.  Before this
@@ -34,9 +38,18 @@ fused           hand-batched ``(B, d)`` state with the Algorithm-7 local
                 solves routed through the batched Pallas kernels; same
                 vmapped per-trial sampling (bit-identical key usage) and
                 batch-aware refresh.  Entry point: ``batched_scan``.
-incremental     the SAME sequential/batched bindings (``make_registry_ops``)
+client-sharded  the CLIENT axis laid over a 1-D device mesh
+                (``make_client_sharded_ops`` / ``client_sharded_scan``):
+                per-client oracles are owner-masked (zeros elsewhere, no
+                collective), the round's single masked ``psum`` assembles the
+                prox result, and the anchor refresh is ONE ``psum`` per
+                refresh EVENT — docs/SCALING.md#one-psum-per-refresh-event.
+                Trial state stays replicated; only problem blocks (and DP
+                noise shifts) shard.  Entry: ``run_batch(shard="clients")``.
+incremental     the SAME sequential/batched/client-sharded bindings
                 stepped one chunk at a time instead of scanned to a fixed
-                horizon: ``registry_step_def`` exposes each ``(init, round)``
+                horizon: ``registry_step_def`` / ``client_sharded_step_def``
+                expose each ``(init, round)``
                 pair as a `core.types.StepDef` consumed by the online session
                 layer (`repro.serve.FedSession` — ``open_session`` /
                 ``session.step(n)`` / ``run_until(eps)``) and the streaming
@@ -210,6 +223,15 @@ class RoundOps:
             return jax.vmap(per_trial, in_axes=(None, 0))(ms, y)
         return jax.vmap(per_trial)(ms, y)
 
+    def init_full_grad(self, x0):
+        """Round-0 anchor gradient for a trial-SHARED ``x0``: computed once on
+        the raw problem oracle and tiled to per-trial state.  A substrate
+        hook (rather than an inline ``problem.full_grad`` call in
+        ``_svrp_init``) so the client-sharded substrate can route the init
+        anchor through the same masked-sum + single-``psum`` assembly as its
+        refresh events."""
+        return self.tile(self._full_grad(x0))
+
     def refresh_grad(self, c, w_next, gbar):
         """Anchor-gradient refresh.  Sequential: the historical lazy
         ``lax.cond`` (full gradient paid only on refresh steps).  Batched: the
@@ -306,7 +328,7 @@ def _svrp_init(ops: RoundOps, x0):
         gbar = ops.full_grad(xB)  # the override sees per-trial state
     else:
         # x0 is trial-shared: compute the anchor gradient once and tile it.
-        gbar = ops.tile(ops.problem.full_grad(x0))
+        gbar = ops.init_full_grad(x0)
     return (xB, xB, gbar, ops.comm0(3 * ops.M))
 
 
@@ -809,3 +831,272 @@ def _catalyzed_batched_scan(
     # driver's concatenated stages.
     to_flat = lambda a: jnp.transpose(a, (2, 0, 1)).reshape(B, -1)
     return RunResult(dist_sq=to_flat(d2s), comm=to_flat(comms), x_final=x_fin)
+
+
+# =============================================== client-sharded substrate
+#
+# The fourth substrate: the CLIENT axis (not the trial axis) laid over a 1-D
+# device mesh.  Each device holds a contiguous block of client state — data
+# rows, DP noise shifts, per-client spectral factors — and the round bodies
+# run unchanged inside `shard_map` against `ClientShardedOps` (docs/SCALING.md
+# derives the communication model; docs/ARCHITECTURE.md places it in the
+# substrate table).
+#
+# Collective model (held by an HLO assertion in tests/test_client_sharded.py):
+#
+# * per-client oracles (``grad``/``cohort_grad``) are computed by the OWNER
+#   device only and masked to zero elsewhere — NO collective.  The wrong-z
+#   prox inputs this leaves on non-owner devices are discarded by the mask
+#   below, so correctness never depends on them.
+# * the prox result is assembled by ONE ``psum`` per round: owner value plus
+#   zeros from everyone else, which is floating-point EXACT (adding zeros),
+#   so per-round iterates are bit-identical to the unsharded substrates.
+# * the anchor refresh is THE one extra cross-device ``psum`` per refresh
+#   event: a masked local sum of per-client gradients inside the batch-aware
+#   ``lax.cond`` branch, all-reduced once and divided by the GLOBAL M.  Only
+#   here (and in the identical init anchor) does the cross-device summation
+#   order differ from the unsharded oracle — the 1e-5 equivalence tolerance
+#   of tests/test_substrates.py covers exactly this term.
+#
+# Non-divisible M pads the client axis with zero blocks: sampling draws from
+# the TRUE M (pads are never owners) and ``valid`` masks pads out of every
+# client mean, so padding never reaches a result (tests/test_client_sharded.py
+# pins this with an M that leaves whole devices pad-only).
+
+
+class ClientShardedOps(RoundOps):
+    """`RoundOps` over a device-resident client block inside ``shard_map``.
+
+    ``local_problem`` is this device's contiguous block of ``M_local``
+    clients (global clients ``[axis_index * M_local, ...)``); ``num_clients``
+    is the GLOBAL M, so sampling and the Section-4.2 communication accounting
+    are identical to every other substrate (comm parity stays integer-exact).
+    ``valid`` masks padding rows appended when M does not divide the mesh.
+    Keys are replicated, so all devices draw the same clients/coins and the
+    PRNG schedule matches the sequential drivers bit-for-bit.
+    """
+
+    def __init__(
+        self, local_problem, hp, x_star, dtype, *,
+        axis: str, num_clients: int, valid, num_trials: int,
+        cohort_size: int | None = None,
+    ):
+        super().__init__(
+            local_problem, hp, x_star, dtype,
+            batched=True, num_trials=num_trials, cohort_size=cohort_size,
+        )
+        self.axis = axis
+        self.M_local = local_problem.num_clients
+        self.M = num_clients  # GLOBAL M: sampling + comm accounting
+        self.valid = valid  # (M_local,) False on padding rows
+
+    def local_index(self, m):
+        """Global client ids -> (clamped local row, this-device-owns-it mask)."""
+        off = jax.lax.axis_index(self.axis) * self.M_local
+        local = m - off
+        resident = (local >= 0) & (local < self.M_local)
+        return jnp.clip(local, 0, self.M_local - 1), resident
+
+    def masked_psum(self, value, resident):
+        """Assemble owner-computed rows: zeros elsewhere make the all-reduce
+        exact.  ``resident`` broadcasts against ``value``'s leading axes."""
+        resident = jnp.expand_dims(resident, -1)
+        return jax.lax.psum(
+            jnp.where(resident, value, jnp.zeros_like(value)), self.axis
+        )
+
+    def mean_clients(self, y):
+        """(B, M_local, d) resident rows -> the GLOBAL client mean broadcast
+        back over the local block (so round bodies' ``jnp.mean(axis=-2)``
+        reproduces the unsharded mean).  One ``psum``."""
+        s = jnp.sum(jnp.where(self.valid[None, :, None], y, 0.0), axis=1)
+        ybar = jax.lax.psum(s, self.axis) / self.M
+        return jnp.broadcast_to(ybar[:, None, :], y.shape)
+
+    # ------------------------------------------------------------- oracles
+    def grad(self, m, y):
+        """Owner-masked sampled-client gradient — deliberately NOT psummed:
+        it only feeds the same client's prox input, whose result the round's
+        single ``masked_psum`` assembles."""
+        local, resident = self.local_index(m)
+        g = jax.vmap(self._grad)(local, y)
+        return jnp.where(resident[:, None], g, jnp.zeros_like(g))
+
+    def cohort_grad(self, ms, y):
+        if ms.ndim == 1:
+            # Full participation (DeepSVRP): the resident client block.  The
+            # global ``arange(M)`` ids are implicit — rows here are local.
+            local_ids = jnp.arange(self.M_local)
+            per_trial = jax.vmap(self._grad, in_axes=(0, None))
+            return jax.vmap(per_trial, in_axes=(None, 0))(local_ids, y)
+        local, resident = self.local_index(ms)  # (B, b)
+        per_trial = jax.vmap(self._grad, in_axes=(0, None))
+        g = jax.vmap(per_trial)(local, y)
+        return jnp.where(resident[..., None], g, jnp.zeros_like(g))
+
+    def full_grad(self, w):
+        """Anchor gradient at per-trial ``w``: masked local client sum, ONE
+        ``psum``, divide by the global M.  Exact for every supported oracle
+        (the per-client mean IS full_grad, pads contribute nothing)."""
+        local_ids = jnp.arange(self.M_local)
+        per_trial = jax.vmap(self._grad, in_axes=(0, None))
+        rows = jax.vmap(per_trial, in_axes=(None, 0))(local_ids, w)  # (B, M_l, d)
+        s = jnp.sum(jnp.where(self.valid[None, :, None], rows, 0.0), axis=1)
+        return jax.lax.psum(s, self.axis) / self.M
+
+    def init_full_grad(self, x0):
+        """The round-0 anchor: same masked-sum + one-psum assembly as the
+        refresh events, on the trial-shared ``x0``."""
+        rows = jax.vmap(self._grad, in_axes=(0, None))(
+            jnp.arange(self.M_local), x0
+        )
+        s = jnp.sum(jnp.where(self.valid[:, None], rows, 0.0), axis=0)
+        return self.tile(jax.lax.psum(s, self.axis) / self.M)
+
+
+def make_client_sharded_ops(
+    algo: str, local_problem, x0, x_star, hp, *,
+    axis: str, num_clients: int, valid, num_trials: int,
+    fused: bool = False, inner_steps: int | None = None, interpret: bool = True,
+    prox_solver: str = "exact", prox_steps: int = 50, prox_tol: float = 1e-10,
+    batch_clients: int | None = None, local_steps: int | None = None,
+) -> ClientShardedOps:
+    """Bind one rounds-defined algorithm to the client-sharded substrate.
+
+    Mirrors `make_registry_ops` (registry prox solvers prepared on the LOCAL
+    block — e.g. the spectral eigh factorizes only resident clients) and
+    `_fused_ops` (``fused=True``: the batched Pallas kernels launched
+    per-device over resident client tiles), wrapping every local solve in the
+    owner-mask + single-``psum`` assembly described above.
+    """
+    from repro.core.prox import get_prox_solver
+
+    B = num_trials
+    dtype = x0.dtype
+    ops = ClientShardedOps(
+        local_problem, hp, x_star, dtype,
+        axis=axis, num_clients=num_clients, valid=valid, num_trials=B,
+        cohort_size=batch_clients,
+    )
+    eta = jnp.broadcast_to(jnp.asarray(hp.eta, dtype), (B,))
+
+    if algo == "deep_svrp":
+        if fused:
+            from repro.kernels.prox_update import prox_update_batched
+
+            M_l = ops.M_local
+            beta_rows = jnp.repeat(
+                jnp.broadcast_to(jnp.asarray(hp.local_lr, dtype), (B,)), M_l
+            )
+            inv_eta_rows = jnp.repeat(1.0 / eta, M_l)
+            m_rows = jnp.tile(jnp.arange(M_l), B)
+            grad_rows = jax.vmap(local_problem.grad)
+
+            def local_prox_gd(z, x):
+                # Resident tile rows through the batched Pallas kernel — one
+                # launch per GD step per device, no collective inside.
+                z_rows = _rows(z)
+                y0 = _rows(jnp.broadcast_to(x[:, None, :], z.shape))
+
+                def body(_, y):
+                    return prox_update_batched(
+                        y, grad_rows(m_rows, y), z_rows, beta_rows,
+                        inv_eta_rows, interpret=interpret,
+                    )
+
+                y = jax.lax.fori_loop(0, inner_steps, body, y0)
+                return ops.mean_clients(y.reshape(z.shape))
+        else:
+            from repro.kernels.ref import prox_update_batched as _prox_ref_b
+
+            beta = jnp.broadcast_to(jnp.asarray(hp.local_lr, dtype), (B,))
+            inv_eta = 1.0 / eta
+            grad_cohort = jax.vmap(jax.vmap(local_problem.grad))
+            local_ids = jnp.arange(ops.M_local)
+
+            def local_prox_gd(z, x):  # (B, M_local, d) targets
+                ms = jnp.broadcast_to(local_ids, (B, ops.M_local))
+
+                def local(y, _):
+                    return _prox_ref_b(y, grad_cohort(ms, y), z, beta, inv_eta), None
+
+                y0 = jnp.broadcast_to(x[:, None, :], z.shape)
+                y, _ = jax.lax.scan(local, y0, None, length=local_steps)
+                return ops.mean_clients(y)
+
+        ops.local_prox_gd = local_prox_gd
+        return ops
+
+    if fused:
+        def solve_rows(m_r, z_r, eta_r, L_r):
+            return prox_gd_fused(
+                local_problem, m_r, z_r, eta_r, L_r, inner_steps, interpret
+            )
+    else:
+        solver = get_prox_solver(prox_solver, local_problem)
+        factors = solver.prepare(local_problem)
+
+        def solve_rows(m_r, z_r, eta_r, L_r):
+            def one(m, z, e, s):
+                return solver.solve(
+                    local_problem, factors, m, z, e,
+                    smoothness=s, steps=prox_steps, tol=prox_tol,
+                )
+
+            return jax.vmap(one)(m_r, z_r, eta_r, L_r)
+
+    L = jnp.broadcast_to(jnp.asarray(getattr(hp, "smoothness", 0.0), dtype), (B,))
+
+    if algo == "svrp_minibatch":
+        def cohort_prox(ms, z):  # (B, b), (B, b, d)
+            local, resident = ops.local_index(ms)
+            b = ms.shape[-1]
+            y = solve_rows(
+                local.reshape(-1), _rows(z), jnp.repeat(eta, b), jnp.repeat(L, b)
+            ).reshape(z.shape)
+            return ops.masked_psum(y, resident)
+
+        ops.cohort_prox = cohort_prox
+    else:
+        def prox(m, z):
+            local, resident = ops.local_index(m)
+            return ops.masked_psum(solve_rows(local, z, eta, L), resident)
+
+        ops.prox = prox
+    return ops
+
+
+def client_sharded_scan(
+    algo: str, local_problem, x0, x_star, keys, hp, *,
+    axis: str, num_clients: int, valid, num_steps: int, **binding,
+) -> RunResult:
+    """Run one rounds-defined algorithm on the client-sharded substrate (the
+    per-device body of ``run_batch(shard="clients")`` — already inside
+    ``shard_map``; ``binding`` forwards to `make_client_sharded_ops`)."""
+    ops = make_client_sharded_ops(
+        algo, local_problem, x0, x_star, hp,
+        axis=axis, num_clients=num_clients, valid=valid,
+        num_trials=keys.shape[0], **binding,
+    )
+    return scan_rounds(ROUND_DEFS[algo], ops, x0, keys, num_steps)
+
+
+def client_sharded_step_def(
+    algo: str, local_problem, x0, x_star, hp, *,
+    axis: str, num_clients: int, valid, num_trials: int, **binding,
+):
+    """The client-sharded substrate's incremental unit for the session layer
+    (`repro.serve.FedSession` with ``substrate="clients"``)."""
+    from repro.core.types import StepDef
+
+    ops = make_client_sharded_ops(
+        algo, local_problem, x0, x_star, hp,
+        axis=axis, num_clients=num_clients, valid=valid,
+        num_trials=num_trials, **binding,
+    )
+    rdef = ROUND_DEFS[algo]
+    return StepDef(
+        init=lambda: rdef.init(ops, x0),
+        step=lambda s, k: rdef.round(ops, s, k),
+        final=lambda s: s[0],
+    )

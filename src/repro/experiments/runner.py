@@ -73,6 +73,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.rounds import (
     ROUND_DEFS,
     batched_scan,
+    client_sharded_scan,
     fused_oracle_kind,
     registry_batched_scan,
 )
@@ -293,10 +294,44 @@ def run_batch(
     hp = spec.params_cls(**_device_hparams(hparams))
     keys = _keys_for(seed_arr)
 
-    if shard not in (None, "data"):
-        raise ValueError(f"unknown shard mode {shard!r}; supported: 'data'")
+    if shard not in (None, "data", "clients"):
+        raise ValueError(
+            f"unknown shard mode {shard!r}; supported: 'data', 'clients'"
+        )
     if devices is not None and shard is None:
-        raise ValueError("devices= only applies with shard='data' (did you forget it?)")
+        raise ValueError(
+            "devices= only applies with shard='data'/'clients' (did you forget it?)"
+        )
+    if shard == "clients":
+        from repro.problems.client_shard import check_client_shardable
+
+        check_client_shardable(problem)
+        if fused:
+            if algo not in ROUND_DEFS:
+                raise ValueError(
+                    "fused=True with shard='clients' supports only the "
+                    f"rounds-defined algorithms {sorted(ROUND_DEFS)}; run "
+                    f"{algo!r} with fused=False"
+                )
+            if not (spec.fusable and cfg.get("prox_solver", "gd") == "gd"):
+                raise ValueError(
+                    f"{algo}: fused=True requires a fusable algo with prox_solver='gd'"
+                )
+            fused_oracle_kind(problem)
+            interpret = True if interpret is None else interpret
+        elif interpret is not None:
+            raise ValueError("interpret only applies to the fused=True Pallas path")
+        res = _run_client_sharded(
+            algo, tuple(sorted(cfg.items())), problem, x0, x_star, keys, hp,
+            devices=devices, fused=fused, interpret=bool(interpret),
+        )
+        return BatchResult(
+            dist_sq=res.dist_sq,
+            comm=res.comm,
+            x_final=res.x_final,
+            hparams=hparams,
+            seeds=seed_arr,
+        )
     if fused:
         # Registry-prox algos fuse only their "gd" path; deep_svrp's local
         # solver IS Algorithm 7, so it has no prox_solver switch to check.
@@ -425,6 +460,104 @@ def _run_sharded(body, problem, x0, x_star, keys, hp, devices) -> RunResult:
     # Mask the pad back out: callers (summary/trial/labels) only ever see the
     # B requested trials.
     return jax.tree.map(lambda a: a[:B], res)
+
+
+# ------------------------------------------------------ client-sharded sweeps
+#
+# shard="clients": the CLIENT axis over the mesh instead of the trial axis
+# (docs/SCALING.md).  Rounds-defined algorithms run `ClientShardedOps` — the
+# owner-masked prox assembly with ONE psum per round and one per anchor
+# refresh event (HLO-asserted in tests/test_client_sharded.py); algorithms
+# outside ROUND_DEFS run their UNCHANGED sequential drivers against the
+# per-oracle `ClientShardedProblem` view (correct, but one collective per
+# oracle call — the documented non-scaling fallback).  Keys and hparams are
+# replicated (every device plays all trials over its resident clients), so
+# PRNG draws are device-identical and comm parity stays integer-exact.
+
+
+@functools.lru_cache(maxsize=None)
+def _client_body(
+    algo: str, static_items: tuple, num_clients: int, fused: bool, interpret: bool
+) -> Callable:
+    """The per-device body of the client-sharded path: `(local_problem,
+    valid, x0, x_star, keys, hp) -> RunResult`, already inside shard_map."""
+    cfg = dict(static_items)
+    if algo in ROUND_DEFS:
+        if fused:
+            spec = ALGOS[algo]
+            inner_steps = cfg[spec.fused_inner_steps]
+            num_steps = cfg[spec.fused_round_steps]
+            extra = {k: cfg[k] for k in ("batch_clients",) if k in cfg}
+
+            def run(local_problem, valid, x0, x_star, keys, hp):
+                return client_sharded_scan(
+                    algo, local_problem, x0, x_star, keys, hp,
+                    axis="clients", num_clients=num_clients, valid=valid,
+                    num_steps=num_steps, fused=True, inner_steps=inner_steps,
+                    interpret=interpret, **extra,
+                )
+
+            return run
+
+        def run(local_problem, valid, x0, x_star, keys, hp):
+            return client_sharded_scan(
+                algo, local_problem, x0, x_star, keys, hp,
+                axis="clients", num_clients=num_clients, valid=valid, **cfg,
+            )
+
+        return run
+
+    from repro.problems.client_shard import ClientShardedProblem
+
+    one = _one_trial_fn(ALGOS[algo].scan_fn, static_items)
+
+    def run(local_problem, valid, x0, x_star, keys, hp):
+        view = ClientShardedProblem(local_problem, valid, "clients", num_clients)
+        return jax.vmap(lambda k, h: one(view, x0, x_star, k, h))(keys, hp)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _client_runner(body: Callable, devices: tuple, treedef) -> Callable:
+    """shard_map `body` over a 1-D ('clients',) mesh: every client-major
+    problem leaf is sharded into contiguous blocks; x0/x_star/keys/hparams
+    are replicated; outputs are replicated (any device's copy is returned).
+    Cached per (body, devices, problem-structure) like `_sharded_runner`."""
+    from repro.launch.mesh import make_client_mesh
+
+    mesh = make_client_mesh(devices)
+    prob_specs = jax.tree.unflatten(
+        treedef, [P("clients")] * treedef.num_leaves
+    )
+
+    def local_block(problem, valid, x0, x_star, key_data, hp):
+        keys = jax.random.wrap_key_data(key_data)
+        return body(problem, valid, x0, x_star, keys, hp)
+
+    smapped = shard_map_compat(
+        local_block,
+        mesh=mesh,
+        in_specs=(prob_specs, P("clients"), P(), P(), P(), P()),
+        out_specs=P(),
+        manual_axes=("clients",),
+    )
+    return jax.jit(smapped)
+
+
+def _run_client_sharded(
+    algo, static_items, problem, x0, x_star, keys, hp, *,
+    devices, fused, interpret,
+) -> RunResult:
+    from repro.problems.client_shard import pad_clients
+
+    devs = tuple(jax.devices()) if devices is None else tuple(devices)
+    M = problem.num_clients
+    padded = pad_clients(problem, M + (-M) % len(devs))
+    valid = jnp.arange(padded.num_clients) < M
+    body = _client_body(algo, static_items, M, fused, interpret)
+    runner = _client_runner(body, devs, jax.tree.structure(padded))
+    return runner(padded, valid, x0, x_star, jax.random.key_data(keys), hp)
 
 
 # -------------------------------------------------------- fused substrate path

@@ -172,15 +172,20 @@ ALGOS: dict[str, AlgoSpec] = {
 
 
 # ---------------------------------------------------------------- substrates
-_SESSION_SUBSTRATES = ("sequential", "batched")
+_SESSION_SUBSTRATES = ("sequential", "batched", "clients")
 
 
 def check_substrate(substrate: str) -> str:
     """Validate a session-substrate name.  ONE function so run_batch,
-    run_sequential and open_session raise the identical error text."""
+    run_sequential and open_session raise the identical error text.
+
+    The substrates themselves (and the equivalence guarantees that tie them
+    together) are documented in docs/ARCHITECTURE.md; "clients" is the
+    client-axis-sharded substrate of docs/SCALING.md."""
     if substrate not in _SESSION_SUBSTRATES:
         raise ValueError(
-            f"unknown substrate {substrate!r}; supported: 'sequential', 'batched'"
+            f"unknown substrate {substrate!r}; supported: "
+            "'sequential', 'batched', 'clients'"
         )
     return substrate
 
@@ -221,9 +226,10 @@ class RunSpec:
     `run_sequential(spec, problem)` and `repro.serve.open_session(spec,
     problem)`.  `static` carries the algorithm's static config (num_steps,
     prox_solver, ...) that the legacy keyword style passes as trailing
-    `**kwargs`.  `substrate` picks the session substrate ("sequential" or
-    "batched"); it is consumed by `open_session` and validated (same error
-    text) by the other two, which execute on their own substrate regardless.
+    `**kwargs`.  `substrate` picks the session substrate ("sequential",
+    "batched" or "clients" — see docs/ARCHITECTURE.md); it is consumed by
+    `open_session` and validated (same error text) by the other two, which
+    execute on their own substrate regardless.
     """
 
     algo: str

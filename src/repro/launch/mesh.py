@@ -50,6 +50,19 @@ def make_sweep_mesh(devices=None):
     return jax.sharding.Mesh(np.array(devs), ("data",))
 
 
+def make_client_mesh(devices=None):
+    """1-D ('clients',) mesh over `devices` (default: all local devices) —
+    the CLIENT-axis mesh of `run_batch(shard="clients")` (docs/SCALING.md).
+
+    Same plain-`Mesh` convention as `make_sweep_mesh`: the substrate
+    shard_maps the axis manually, laying each problem's client-major leaves
+    (data blocks, DP noise shifts) over the devices in contiguous blocks."""
+    import numpy as np
+
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return jax.sharding.Mesh(np.array(devs), ("clients",))
+
+
 def data_axis_names(mesh) -> tuple[str, ...]:
     """The client/cohort axes: ('pod', 'data') when multi-pod else ('data',)."""
     return tuple(n for n in mesh.axis_names if n in ("pod", "data"))

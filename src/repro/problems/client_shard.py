@@ -1,0 +1,153 @@
+"""Client-axis sharding support: padding, the support contract, and the
+device-local problem view.
+
+`run_batch(shard="clients")` lays the CLIENT axis over a 1-D device mesh
+(docs/SCALING.md).  A problem opts in by setting the class attribute
+``client_shardable = True``, which is a contract with three clauses:
+
+* every array leaf is client-major — shape ``(M, ...)`` — so the generic
+  `jax.sharding.PartitionSpec("clients")` tree shards all of them at once
+  (data blocks, DP noise shifts, anything added later);
+* zero-padded client rows are benign oracle inputs (finite gradients, a
+  solvable prox) — padding to a device multiple appends zero blocks that
+  are masked out of every result but still traced;
+* per-client oracles touch only the indexed client's rows, so a device-local
+  block answers them bit-identically to the full problem.
+
+`QuadraticProblem` / `LogisticProblem` (and their DP-ERM subclasses, whose
+``dp_shift`` is client-major noise state) declare support.  Problems that do
+not declare it are rejected with a trace-time error before any device code
+runs — the test for this lives in tests/test_client_sharded.py.
+
+`ClientShardedProblem` is the device-local VIEW used for algorithms outside
+`repro.core.rounds.ROUND_DEFS` (sgd/svrg/scaffold/dane/acc_extragradient/
+composite/catalyzed_svrp): their unchanged sequential drivers run inside
+``shard_map`` against this object, which answers each per-client oracle by
+computing on the owner device, masking elsewhere, and all-reducing —
+correct but chattier than the rounds-defined algorithms' one-psum-per-round
+`ClientShardedOps` binding (see docs/SCALING.md for the two collective
+models).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def check_client_shardable(problem) -> None:
+    """Trace-time gate for ``shard='clients'`` — same error style as the
+    substrate/solver validations in `repro.experiments.spec`."""
+    if not getattr(problem, "client_shardable", False):
+        raise ValueError(
+            f"shard='clients' is not supported for {type(problem).__name__}: "
+            "the problem does not declare client-axis sharding.  Declare it by "
+            "setting the class attribute `client_shardable = True` once every "
+            "array leaf is client-major (M, ...) and zero-padded client rows "
+            "are benign oracle inputs (see repro.problems.client_shard)."
+        )
+
+
+def pad_clients(problem, total: int):
+    """Zero-pad every (client-major) array leaf of ``problem`` to ``total``
+    clients so the axis divides the mesh.  Pads are masked out of every
+    result by the substrate's ``valid`` mask and are never sampled (draws use
+    the true M), so they only need to be traceable, not meaningful."""
+    M = problem.num_clients
+    bad = [
+        leaf.shape[:1]
+        for leaf in jax.tree.leaves(problem)
+        if leaf.shape[:1] != (M,)
+    ]
+    if bad:
+        raise ValueError(
+            f"client_shardable problem {type(problem).__name__} has array "
+            f"leaves that are not client-major (expected leading axis {M}): "
+            "the client-axis sharding contract is violated"
+        )
+    if total == M:
+        return problem
+    return jax.tree.map(
+        lambda a: jnp.pad(a, [(0, total - M)] + [(0, 0)] * (a.ndim - 1)),
+        problem,
+    )
+
+
+class ClientShardedProblem:
+    """Device-local view of a client-sharded problem (lives INSIDE shard_map).
+
+    Presents the full-problem oracle surface over this device's resident
+    block: per-client oracles are computed by the owner (clamped local row),
+    masked to zero elsewhere, and assembled with one ``psum``; client means
+    are masked local sums all-reduced and divided by the GLOBAL M.  Exposes
+    ``num_clients`` as the global M so client sampling and communication
+    accounting inside the unchanged drivers stay identical to the other
+    substrates.
+
+    Deliberately does NOT forward data attributes (``A``/``b``/``Z``): code
+    paths that special-case raw data layouts (`baselines._surrogate_min`'s
+    closed-form quadratic solve, `rounds.fused_oracle_kind`) must fall back
+    to their oracle-only routes, which this view answers exactly.
+    """
+
+    def __init__(self, local, valid, axis: str, num_clients: int):
+        self._local = local
+        self._valid = valid  # (M_local,) False on padding rows
+        self.axis = axis
+        self.num_clients = int(num_clients)
+
+    @property
+    def dim(self) -> int:
+        return self._local.dim
+
+    # ------------------------------------------------------------ indexing
+    def _index(self, m):
+        M_l = self._local.num_clients
+        off = jax.lax.axis_index(self.axis) * M_l
+        local = m - off
+        resident = (local >= 0) & (local < M_l)
+        return jnp.clip(local, 0, M_l - 1), resident
+
+    def _assemble(self, value, resident):
+        return jax.lax.psum(
+            jnp.where(resident, value, jnp.zeros_like(value)), self.axis
+        )
+
+    # ------------------------------------------------------------- oracles
+    def grad(self, m, x):
+        local, resident = self._index(m)
+        return self._assemble(self._local.grad(local, x), resident)
+
+    def hessian(self, m, x):
+        local, resident = self._index(m)
+        return self._assemble(self._local.hessian(local, x), resident)
+
+    def full_grad(self, x):
+        rows = jax.vmap(self._local.grad, in_axes=(0, None))(
+            jnp.arange(self._local.num_clients), x
+        )
+        s = jnp.sum(jnp.where(self._valid[:, None], rows, 0.0), axis=0)
+        return jax.lax.psum(s, self.axis) / self.num_clients
+
+    def prox(self, m, z, eta, *args, **kwargs):
+        local, resident = self._index(m)
+        return self._assemble(
+            self._local.prox(local, z, eta, *args, **kwargs), resident
+        )
+
+    def prox_factors(self):
+        """Per-client solver state for the RESIDENT block only (e.g. the
+        spectral eigh factorizes M_local matrices per device)."""
+        return self._local.prox_factors()
+
+    def prox_spectral(self, m, z, eta, factors):
+        local, resident = self._index(m)
+        return self._assemble(
+            self._local.prox_spectral(local, z, eta, factors), resident
+        )
+
+    def shifted(self, gamma, y):
+        """Catalyst's per-stage shift is a per-client local operation, so the
+        shifted view wraps the shifted LOCAL block (same mask, same mesh)."""
+        return ClientShardedProblem(
+            self._local.shifted(gamma, y), self._valid, self.axis, self.num_clients
+        )

@@ -39,6 +39,13 @@ class LogisticProblem:
     y: jax.Array  # (M, n), +-1
     lam: float = dataclasses.field(metadata=dict(static=True))
 
+    # Client-axis sharding contract (repro.problems.client_shard): leaves are
+    # client-major and a zero-padded client (Z_m = 0, y_m = 0) has benign
+    # oracles — its loss degenerates to the ridge term, grad = lam x, and the
+    # guarded-Newton prox stays well-posed.  Inherited by DPLogisticProblem
+    # (`dp_shift` is client-major noise state, zero-padded like the data).
+    client_shardable = True
+
     @property
     def num_clients(self) -> int:
         return self.Z.shape[0]

@@ -30,6 +30,12 @@ class QuadraticProblem:
     A: jax.Array  # (M, d, d), symmetric, each >= mu I
     b: jax.Array  # (M, d)
 
+    # Client-axis sharding contract (repro.problems.client_shard): every
+    # array leaf is client-major and a zero-padded client (A_m = 0, b_m = 0)
+    # has benign oracles — grad 0, prox solve (I + eta*0) y = z.  Inherited
+    # by the DP-ERM subclass, whose noise already rides `b`.
+    client_shardable = True
+
     # --- structural properties -------------------------------------------------
     @property
     def num_clients(self) -> int:

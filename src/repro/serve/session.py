@@ -18,13 +18,17 @@ rest) — as an *incremental* API:
 Semantics are scan-equivalence by construction: `k` incremental rounds
 produce the first `k` columns of `run_batch`'s trajectories (same PRNG keys,
 same round bodies, same substrate) — `run_batch` is now just "scan over the
-round body the session steps".  Two substrates:
+round body the session steps".  Three substrates (docs/ARCHITECTURE.md):
 
 * ``substrate="batched"`` (default): ONE device-resident state for all B
   trials, stepped by the same batch-aware registry path run_batch uses
   (rounds algos) or a vmapped per-trial step (everything else).
 * ``substrate="sequential"``: one state per trial, stepped by the per-trial
   round body — the run_sequential oracle, steppable.
+* ``substrate="clients"``: the client-axis-sharded substrate
+  (docs/SCALING.md) — the problem's client blocks live sharded over a 1-D
+  device mesh and each chunk is one shard_mapped dispatch; trial state stays
+  replicated so `step()`/`x()`/`result()` behave identically.
 
 State stays on device between `step()` calls and is donated back to each
 chunk (where the backend supports donation), so incremental stepping costs
@@ -55,7 +59,7 @@ from repro.core.baselines import (
 )
 from repro.core.catalyst import catalyzed_step_def
 from repro.core.composite import composite_step_def
-from repro.core.rounds import ROUND_DEFS, registry_step_def
+from repro.core.rounds import ROUND_DEFS, client_sharded_step_def, registry_step_def
 from repro.core.types import StepDef
 from repro.experiments.runner import BatchResult
 from repro.experiments.spec import (
@@ -74,6 +78,9 @@ _REGISTRY_BINDING = ("prox_solver", "prox_steps", "prox_tol", "batch_clients", "
 # Buffer donation is not implemented on the CPU backend (jax warns and
 # ignores it); only request it where it is real.
 _DONATE_STATE: tuple[int, ...] = () if jax.default_backend() == "cpu" else (4,)
+# The client-sharded chunk has two extra leading args (padded problem, valid
+# mask), so its state sits at a different position.
+_DONATE_STATE_CLIENTS: tuple[int, ...] = () if jax.default_backend() == "cpu" else (5,)
 
 # Post-round state dtype signatures, keyed on the full config+shape signature
 # (see FedSession._canonicalize).
@@ -264,6 +271,130 @@ def _batched_final_fn(algo: str, static_items: tuple, num_trials: int):
     return jax.jit(final)
 
 
+# --------------------------------------------------- client-sharded substrate
+# The session analogue of runner._run_client_sharded (docs/SCALING.md): the
+# padded problem's client-major leaves live sharded over a 1-D ('clients',)
+# mesh; x0/x_star/hparams/keys/state stay replicated, so every chunk is one
+# shard_mapped dispatch whose outputs are device-identical.  Keys cross the
+# shard_map boundary as raw uint32 (`jax.random.key_data`) because typed PRNG
+# keys cannot be partitioned arguments.
+
+
+def _client_shard_map(fn, treedef, n_state_specs: int):
+    """shard_map `fn(local_problem, valid, *replicated)` over all devices:
+    problem leaves and the valid mask are split on 'clients', everything else
+    (x0, x_star, hparams, state, keys) is replicated in and out."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_client_mesh
+    from repro.utils.shard import shard_map_compat
+
+    mesh = make_client_mesh()
+    prob_specs = jax.tree.unflatten(treedef, [P("clients")] * treedef.num_leaves)
+    return shard_map_compat(
+        fn,
+        mesh=mesh,
+        in_specs=(prob_specs, P("clients")) + (P(),) * n_state_specs,
+        out_specs=P(),
+        manual_axes=("clients",),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _client_chunk_fn(algo: str, static_items: tuple, num_clients: int, treedef):
+    cfg = dict(static_items)
+    if algo in ROUND_DEFS:
+        binding = {k: cfg[k] for k in _REGISTRY_BINDING if k in cfg}
+
+        def scan_chunk(local_problem, valid, x0, x_star, hp, state, keys):
+            sd = client_sharded_step_def(
+                algo, local_problem, x0, x_star, hp,
+                axis="clients", num_clients=num_clients, valid=valid,
+                num_trials=keys.shape[1], **binding,
+            )
+            return jax.lax.scan(sd.step, state, keys)
+
+    else:
+
+        def scan_chunk(local_problem, valid, x0, x_star, hp, state, keys):
+            from repro.problems.client_shard import ClientShardedProblem
+
+            view = ClientShardedProblem(local_problem, valid, "clients", num_clients)
+
+            def one(h, s, k):
+                return trial_step_def(algo, view, x0, x_star, h, cfg).step(s, k)
+
+            vstep = jax.vmap(one)
+            return jax.lax.scan(lambda s, krow: vstep(hp, s, krow), state, keys)
+
+    def local_block(local_problem, valid, x0, x_star, hp, state, raw_bn):
+        keys_bn = jax.random.wrap_key_data(raw_bn)
+        fin, (d2, comm) = scan_chunk(
+            local_problem, valid, x0, x_star, hp, state,
+            jnp.swapaxes(keys_bn, 0, 1),
+        )
+        return fin, (jnp.swapaxes(d2, 0, 1), jnp.swapaxes(comm, 0, 1))
+
+    mapped = _client_shard_map(local_block, treedef, n_state_specs=5)
+    return jax.jit(mapped, donate_argnums=_DONATE_STATE_CLIENTS)
+
+
+@functools.lru_cache(maxsize=None)
+def _client_init_fn(algo: str, static_items: tuple, num_trials: int,
+                    num_clients: int, treedef):
+    cfg = dict(static_items)
+    if algo in ROUND_DEFS:
+        binding = {k: cfg[k] for k in _REGISTRY_BINDING if k in cfg}
+
+        def init(local_problem, valid, x0, x_star, hp):
+            sd = client_sharded_step_def(
+                algo, local_problem, x0, x_star, hp,
+                axis="clients", num_clients=num_clients, valid=valid,
+                num_trials=num_trials, **binding,
+            )
+            return sd.init()
+
+    else:
+
+        def init(local_problem, valid, x0, x_star, hp):
+            from repro.problems.client_shard import ClientShardedProblem
+
+            view = ClientShardedProblem(local_problem, valid, "clients", num_clients)
+            return jax.vmap(
+                lambda h: trial_step_def(algo, view, x0, x_star, h, cfg).init()
+            )(hp)
+
+    return jax.jit(_client_shard_map(init, treedef, n_state_specs=3))
+
+
+@functools.lru_cache(maxsize=None)
+def _client_final_fn(algo: str, static_items: tuple, num_trials: int,
+                     num_clients: int, treedef):
+    cfg = dict(static_items)
+    if algo in ROUND_DEFS:
+        binding = {k: cfg[k] for k in _REGISTRY_BINDING if k in cfg}
+
+        def final(local_problem, valid, x0, x_star, hp, state):
+            sd = client_sharded_step_def(
+                algo, local_problem, x0, x_star, hp,
+                axis="clients", num_clients=num_clients, valid=valid,
+                num_trials=num_trials, **binding,
+            )
+            return sd.final(state)
+
+    else:
+
+        def final(local_problem, valid, x0, x_star, hp, state):
+            from repro.problems.client_shard import ClientShardedProblem
+
+            view = ClientShardedProblem(local_problem, valid, "clients", num_clients)
+            return jax.vmap(
+                lambda h, s: trial_step_def(algo, view, x0, x_star, h, cfg).final(s)
+            )(hp, state)
+
+    return jax.jit(_client_shard_map(final, treedef, n_state_specs=4))
+
+
 class FedSession:
     """A sweep held open: device-resident state, stepped n rounds at a time.
 
@@ -292,7 +423,20 @@ class FedSession:
         self._t = 0
         self._d2: list[jax.Array] = []  # (B, n) chunks
         self._comm: list[jax.Array] = []
-        if substrate == "batched":
+        if substrate == "clients":
+            from repro.problems.client_shard import check_client_shardable, pad_clients
+
+            check_client_shardable(problem)
+            devs = jax.devices()
+            self._M = problem.num_clients
+            self._padded = pad_clients(problem, self._M + (-self._M) % len(devs))
+            self._valid = jnp.arange(self._padded.num_clients) < self._M
+            self._treedef = jax.tree.structure(self._padded)
+            state = _client_init_fn(
+                self._algo, self._static_items, self._B, self._M, self._treedef
+            )(self._padded, self._valid, self._x0, self._x_star, self._hp)
+            self._state = self._canonicalize(state, self._keys[:, :1])
+        elif substrate == "batched":
             state = _batched_init_fn(self._algo, self._static_items, self._B)(
                 problem, self._x0, self._x_star, self._hp
             )
@@ -318,24 +462,28 @@ class FedSession:
         compiling anything; the dtype list is cached per config signature so
         repeated opens (the serving pattern) skip even the trace."""
         if trial is None:
-            chunk = _batched_chunk_fn(self._algo, self._static_items)
             hp = self._hp
+
+            def call(s):
+                return self._chunk_call(s, keys1)
+
         else:
             chunk = _seq_chunk_fn(self._algo, self._static_items)
             hp = self._hp_i(trial)
+
+            def call(s):
+                return chunk(self._problem, self._x0, self._x_star, hp, s, keys1)
+
         leaves, treedef = jax.tree.flatten(state)
         sig = tuple(
             (jnp.shape(a), str(jnp.result_type(a)))
             for tree in (state, hp, self._x0, self._x_star, self._problem, keys1)
             for a in jax.tree.leaves(tree)
         )
-        cache_key = (self._algo, self._static_items, trial is None, sig)
+        cache_key = (self._algo, self._static_items, self._substrate, trial is None, sig)
         dtypes = _CANONICAL_DTYPES.get(cache_key)
         if dtypes is None:
-            out_state, _ = jax.eval_shape(
-                lambda s: chunk(self._problem, self._x0, self._x_star, hp, s, keys1),
-                state,
-            )
+            out_state, _ = jax.eval_shape(call, state)
             dtypes = tuple(av.dtype for av in jax.tree.leaves(out_state))
             _CANONICAL_DTYPES[cache_key] = dtypes
         return jax.tree.unflatten(
@@ -374,8 +522,26 @@ class FedSession:
             return jnp.zeros((self._B, 0), dtype=jnp.int32)
         return jnp.concatenate(self._comm, axis=1)
 
+    def _chunk_call(self, state, keys_bn):
+        """One batch-of-trials chunk on the session's device substrate
+        (batched: plain jit; clients: shard_mapped over the padded problem)."""
+        if self._substrate == "clients":
+            chunk = _client_chunk_fn(
+                self._algo, self._static_items, self._M, self._treedef
+            )
+            return chunk(
+                self._padded, self._valid, self._x0, self._x_star, self._hp,
+                state, jax.random.key_data(keys_bn),
+            )
+        chunk = _batched_chunk_fn(self._algo, self._static_items)
+        return chunk(self._problem, self._x0, self._x_star, self._hp, state, keys_bn)
+
     def x(self) -> jax.Array:
         """(B, d) current iterates."""
+        if self._substrate == "clients":
+            return _client_final_fn(
+                self._algo, self._static_items, self._B, self._M, self._treedef
+            )(self._padded, self._valid, self._x0, self._x_star, self._hp, self._state)
         if self._substrate == "batched":
             return _batched_final_fn(self._algo, self._static_items, self._B)(
                 self._problem, self._x0, self._x_star, self._hp, self._state
@@ -405,12 +571,8 @@ class FedSession:
                 "session with a larger round budget to continue."
             )
         sl = slice(self._t, self._t + n)
-        if self._substrate == "batched":
-            chunk = _batched_chunk_fn(self._algo, self._static_items)
-            self._state, (d2, comm) = chunk(
-                self._problem, self._x0, self._x_star, self._hp, self._state,
-                self._keys[:, sl],
-            )
+        if self._substrate in ("batched", "clients"):
+            self._state, (d2, comm) = self._chunk_call(self._state, self._keys[:, sl])
         else:
             chunk = _seq_chunk_fn(self._algo, self._static_items)
             d2_rows, comm_rows = [], []

@@ -4,6 +4,7 @@ import sys
 import types
 
 import jax
+import pytest
 
 # The paper-faithful layer validates convergence to ~1e-12 of the optimum;
 # float64 is required for that. Model/kernel code pins its dtypes explicitly,
@@ -29,3 +30,15 @@ except ModuleNotFoundError:
     sys.modules["hypothesis.strategies"] = _stub
     sys.modules["hypothesis.extra"] = _extra
     sys.modules["hypothesis.extra.numpy"] = _extra_np
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_executables_between_modules():
+    # The suite compiles hundreds of executables across its modules; on a
+    # single-core host the accumulated JIT code eventually segfaults XLA's
+    # CPU compiler mid-suite (deterministically, in a trivial compile, while
+    # the same module passes in isolation). Dropping compiled artifacts at
+    # module boundaries keeps the live-executable set bounded; each module
+    # recompiles its own programs anyway, so cross-module sharing is minimal.
+    yield
+    jax.clear_caches()

@@ -1,0 +1,199 @@
+"""Client-axis sharded substrate: run_batch(shard="clients") on 8 simulated
+CPU devices.
+
+Runs in SUBPROCESSES so the 8-device XLA flag never leaks into the rest of
+the suite (same pattern as test_sharded.py).  test_substrates.py already
+holds sequential == client-sharded for every ALGOS entry on whatever mesh CI
+gives it; this file pins the properties that only show up on a REAL multi-
+device mesh:
+
+* pad+mask for a client count that does not divide the device count
+  (including devices that hold ONLY padding rows);
+* the collective model of docs/SCALING.md, asserted on compiled HLO:
+  exactly ONE psum per round plus ONE per anchor-refresh event (all-reduce
+  count 3 for SVRP = init anchor + round prox + refresh branch; 1 for
+  anchor-free SPPM) and no other collective ops at all;
+* the session layer's substrate="clients" chunks reproduce run_batch;
+* the trace-time rejection paths fire before any device code runs.
+"""
+import os
+import subprocess
+import sys
+
+_ENV_CODE = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.core import theorem2_stepsize
+from repro.experiments import run_batch, run_sequential
+from repro.problems import make_synthetic_quadratic
+
+assert len(jax.devices()) == 8, jax.devices()
+
+def check(a, b, rtol=1e-5, atol=1e-24):
+    np.testing.assert_allclose(np.asarray(a.dist_sq), np.asarray(b.dist_sq), rtol=rtol, atol=atol)
+    np.testing.assert_array_equal(np.asarray(a.comm), np.asarray(b.comm))
+    assert a.comm.dtype == b.comm.dtype
+    np.testing.assert_allclose(np.asarray(a.x_final), np.asarray(b.x_final), rtol=rtol, atol=1e-12)
+"""
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", _ENV_CODE + code],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=500,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    return r.stdout
+
+
+def test_client_sharded_nondivisible_M_matches_sequential():
+    """M=10 on 8 devices: M_pad=16, two clients per device, devices 5-7 hold
+    ONLY zero-padding.  The padded rows must be invisible — never sampled,
+    masked out of every anchor mean — so per-trial results equal the
+    sequential oracle and comm stays integer-exact against the TRUE M."""
+    out = _run(
+        """
+prob = make_synthetic_quadratic(num_clients=10, dim=6, mu=1.0, L=80.0, delta=4.0, seed=1)
+mu, delta = float(prob.strong_convexity()), float(prob.similarity())
+eta = theorem2_stepsize(mu, delta)
+grid = {"eta": [eta, eta / 2], "p": 0.2}
+cl = run_batch("svrp", prob, grid=grid, seeds=3, num_steps=120, shard="clients")
+sq = run_sequential("svrp", prob, grid=grid, seeds=3, num_steps=120)
+assert cl.dist_sq.shape == (6, 120), cl.dist_sq.shape
+check(cl, sq)
+# comm accounting uses the true M=10, never the padded 16
+incs = set(np.unique(np.diff(np.asarray(cl.comm), axis=1)).tolist())
+assert incs <= {2, 2 + 3 * 10}, incs
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_client_sharded_divisible_M_and_fused():
+    """M=16 on 8 devices (divisible, no padding) for the minibatch cohort
+    gather and the fused per-device Pallas tile path."""
+    out = _run(
+        """
+prob = make_synthetic_quadratic(num_clients=16, dim=6, mu=1.0, L=80.0, delta=4.0, seed=3)
+mu, delta = float(prob.strong_convexity()), float(prob.similarity())
+L = float(prob.smoothness_max())
+eta = theorem2_stepsize(mu, delta)
+kw = dict(grid={"eta": 3 * eta, "p": 0.25}, seeds=3, num_steps=60, batch_clients=4)
+check(run_batch("svrp_minibatch", prob, shard="clients", **kw),
+      run_sequential("svrp_minibatch", prob, **kw))
+fkw = dict(grid={"eta": [eta, eta / 2], "p": 0.2, "smoothness": L}, seeds=3,
+           num_steps=50, prox_solver="gd", prox_steps=20)
+check(run_batch("svrp", prob, shard="clients", fused=True, **fkw),
+      run_sequential("svrp", prob, **fkw))
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_client_sharded_one_psum_per_refresh_event():
+    """The docs/SCALING.md collective model, pinned on compiled HLO: SVRP
+    lowers to exactly THREE all-reduces (round-0 anchor init, the round's
+    single masked prox psum, the refresh-branch full gradient — one psum per
+    refresh EVENT, not per client) and anchor-free SPPM to exactly ONE; no
+    all-gather / reduce-scatter / collective-permute / all-to-all anywhere."""
+    out = _run(
+        r"""
+import re
+from repro.experiments.runner import _client_body, _client_runner
+from repro.core.sppm import SPPMParams
+from repro.core.svrp import SVRPParams
+
+prob = make_synthetic_quadratic(num_clients=16, dim=6, mu=1.0, L=80.0, delta=4.0, seed=1)
+x0 = jnp.zeros(prob.dim)
+xs = prob.minimizer()
+keys = jax.vmap(jax.random.key)(jnp.arange(4, dtype=jnp.uint32))
+valid = jnp.arange(16) < 16
+treedef = jax.tree.structure(prob)
+cfg = {"num_steps": 20, "prox_solver": "exact", "prox_steps": 50, "prox_tol": 1e-10}
+
+def all_reduce_defs(algo, hp):
+    body = _client_body(algo, tuple(sorted(cfg.items())), 16, False, False)
+    runner = _client_runner(body, tuple(jax.devices()), treedef)
+    txt = runner.lower(prob, valid, x0, xs, jax.random.key_data(keys), hp)
+    txt = txt.compile().as_text()
+    for coll in ("all-gather", "reduce-scatter", "collective-permute", "all-to-all"):
+        assert coll not in txt, coll
+    return len(re.findall(r"= \S+ all-reduce(?:-start)?\(", txt))
+
+n_svrp = all_reduce_defs("svrp", SVRPParams(
+    eta=jnp.full((4,), 0.02), p=jnp.full((4,), 0.2), smoothness=jnp.zeros((4,))))
+assert n_svrp == 3, n_svrp
+n_sppm = all_reduce_defs("sppm", SPPMParams(
+    eta=jnp.full((4,), 0.05), smoothness=jnp.zeros((4,))))
+assert n_sppm == 1, n_sppm
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_client_sharded_session_matches_run_batch():
+    """open_session(substrate="clients") chunks land on the run_batch
+    trajectories (same keys, same round bodies, shard_mapped chunk)."""
+    out = _run(
+        """
+from repro.serve import open_session
+
+prob = make_synthetic_quadratic(num_clients=10, dim=6, mu=1.0, L=80.0, delta=4.0, seed=1)
+kw = dict(grid={"eta": [0.02, 0.01], "p": 0.2}, seeds=2, num_steps=40)
+ref = run_batch("svrp", prob, **kw)
+s = open_session("svrp", prob, substrate="clients", **kw)
+s.step(7)
+s.step(s.horizon - 7)
+check(s.result(), ref)
+kw = dict(grid={"local_lr": 1 / 320.0}, seeds=2, num_rounds=20, local_steps=4)
+ref = run_batch("scaffold", prob, **kw)
+s = open_session("scaffold", prob, substrate="clients", **kw)
+s.step(20)
+check(s.result(), ref)
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_client_sharded_rejections_are_trace_time():
+    """Both rejection paths raise BEFORE any device computation: an
+    undeclared problem, and fused=True for a non-rounds algorithm."""
+    out = _run(
+        """
+from repro.problems.quadratic import QuadraticProblem
+
+prob = make_synthetic_quadratic(num_clients=10, dim=6, mu=1.0, L=80.0, delta=4.0, seed=1)
+
+class UndeclaredProblem(QuadraticProblem):
+    client_shardable = False
+
+try:
+    run_batch("svrp", UndeclaredProblem(A=prob.A, b=prob.b),
+              grid={"eta": 0.1, "p": 0.1}, num_steps=5, shard="clients")
+    raise SystemExit("undeclared problem was not rejected")
+except ValueError as e:
+    assert "client_shardable" in str(e), e
+
+try:
+    run_batch("svrg", prob, grid={"stepsize": 1e-3, "p": 0.1}, num_steps=5,
+              shard="clients", fused=True)
+    raise SystemExit("fused svrg was not rejected")
+except ValueError as e:
+    assert "rounds-defined" in str(e), e
+print('OK')
+"""
+    )
+    assert "OK" in out

@@ -1,0 +1,70 @@
+"""Docs tree stays wired: links resolve, python snippets import.
+
+Two cheap invariants over ``docs/*.md`` + ``README.md``:
+
+* every relative markdown link ``[text](path)`` points at a file that exists
+  in the repo (external URLs and pure ``#anchor`` links are skipped; GitHub
+  web-relative links such as the CI badge's ``../../actions/...`` resolve
+  outside the repo root and are skipped for the same reason);
+* every ``import`` / ``from ... import`` line inside a ```python fence
+  actually imports — a renamed symbol breaks the docs page here instead of
+  on a reader's machine.
+
+This is the CI docs check; it runs in-process so it needs nothing beyond the
+tier-1 environment.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted([REPO / "README.md", *(REPO / "docs").glob("*.md")])
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_IMPORT = re.compile(r"^(?:import\s+\S|from\s+\S+\s+import\s+\S)")
+
+
+def _doc_ids():
+    return [p.relative_to(REPO).as_posix() for p in DOC_FILES]
+
+
+def test_docs_tree_exists():
+    names = {p.name for p in DOC_FILES}
+    assert {"README.md", "ARCHITECTURE.md", "SCALING.md", "BENCHMARKS.md"} <= names
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids())
+def test_markdown_links_resolve(doc):
+    text = doc.read_text()
+    broken = []
+    for target in _LINK.findall(text):
+        if "://" in target or target.startswith(("#", "mailto:")):
+            continue
+        path = (doc.parent / target.split("#", 1)[0]).resolve()
+        if not path.is_relative_to(REPO):
+            continue  # GitHub web-relative (badge links), not a file path
+        if not path.exists():
+            broken.append(target)
+    assert not broken, f"{doc.name}: broken links {broken}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids())
+def test_python_snippet_imports(doc):
+    imports = []
+    for block in _FENCE.findall(doc.read_text()):
+        for line in block.splitlines():
+            if _IMPORT.match(line.strip()):
+                imports.append(line.strip())
+    for line in imports:
+        exec(line, {})  # noqa: S102 - doc snippet smoke
+
+
+def test_docs_cross_reference_each_other():
+    # Each docs page names its companions; README links all three.
+    readme = (REPO / "README.md").read_text()
+    for page in ("ARCHITECTURE.md", "SCALING.md", "BENCHMARKS.md"):
+        assert f"docs/{page}" in readme, f"README does not link docs/{page}"

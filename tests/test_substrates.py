@@ -1,11 +1,12 @@
 """Round-substrate registry: one parametrized suite over EVERY ALGOS entry.
 
 The substrate layer (`repro.core.rounds`) defines each algorithm's round once
-and executes it three ways; this suite is the gate that keeps the three
-executions interchangeable — for every registered algorithm:
+and executes it four ways (docs/ARCHITECTURE.md); this suite is the gate that
+keeps the executions interchangeable — for every registered algorithm:
 
     sequential (per-trial scan)  ==  vmapped (run_batch)
                                  ==  sharded (run_batch(shard="data"))
+                                 ==  client-sharded (run_batch(shard="clients"))
                                  ==  fused   (run_batch(fused=True), where
                                               the AlgoSpec declares support)
 
@@ -17,8 +18,12 @@ fails `test_every_algo_has_a_case` until it is wired into the table below,
 and then inherits the whole substrate contract.
 
 Under CI's sharded-8dev matrix entry this file runs with 8 simulated XLA host
-devices, so the shard="data" cases exercise real pad+mask blocks, not just
-the degenerate single-device mesh.
+devices, so the shard="data" cases exercise real pad+mask blocks and the
+shard="clients" cases exercise real client-axis padding (M=10 on 8 devices
+leaves three all-pad devices); elsewhere the meshes are degenerate
+single-device.  The collective-count assertions (exactly one psum per anchor
+refresh event) live in tests/test_client_sharded.py, which always forces the
+8-device mesh via subprocesses.
 """
 import jax
 import jax.numpy as jnp
@@ -199,6 +204,32 @@ def test_sequential_matches_fused_sharded(algo, prob, cases):
     )
 
 
+@pytest.mark.parametrize("algo", sorted(ALGOS))
+def test_sequential_matches_client_sharded(algo, prob, cases):
+    """shard="clients" == sequential for every algo, comm integer-exact.
+
+    M=10 does not divide CI's 8-device mesh, so the padded client rows (and
+    the three devices holding only padding) must be invisible in every
+    result (docs/SCALING.md's pad+mask contract)."""
+    kw, _ = cases[algo]
+    _check(
+        run_sequential(algo, prob, **kw),
+        run_batch(algo, prob, shard="clients", **kw),
+    )
+
+
+@pytest.mark.parametrize("algo", ["sppm", "svrp", "svrp_minibatch", "deep_svrp"])
+def test_sequential_matches_fused_client_sharded(algo, prob, cases):
+    """fused=True + shard='clients': the Pallas Algorithm-7 kernels run
+    per-device over the RESIDENT client tiles; the round's single masked
+    psum assembles the cohort result."""
+    _, kw = cases[algo]
+    _check(
+        run_sequential(algo, prob, **kw),
+        run_batch(algo, prob, fused=True, shard="clients", **kw),
+    )
+
+
 # ------------------------------------------------ communication accounting
 # Section 4.2 parity audit: the unified rounds must reproduce the paper's
 # accounting exactly on every substrate — initial-term split (3M for anchor
@@ -344,6 +375,20 @@ def test_dp_sequential_matches_fused(case, dp_cases):
     assert seq.comm.dtype == fus.comm.dtype
 
 
+@pytest.mark.parametrize("case", [
+    "sppm-dp_quadratic", "svrp-dp_quadratic", "svrp_minibatch-dp_quadratic",
+    "sppm-dp_logistic", "svrp-dp_logistic",
+])
+def test_dp_sequential_matches_client_sharded(case, dp_cases):
+    """DP problems on shard='clients': the per-client noise table
+    (``dp_shift`` / the noise folded into ``b``) is client-major problem
+    data, so it shards and zero-pads with the rest of the client state."""
+    prob, kw, _ = dp_cases[case]
+    algo = case.split("-")[0]
+    _check(run_sequential(algo, prob, **kw),
+           run_batch(algo, prob, shard="clients", **kw))
+
+
 def test_dp_noise_draws_identical_across_substrates(dp_logistic_prob, dp_cases):
     """The noise is problem data (one PRNG draw at construction), so substrate
     equivalence holds INCLUDING the draws: zeroing the noise changes every
@@ -398,3 +443,27 @@ def test_fused_rejects_unfusable_algo(prob):
     with pytest.raises(ValueError, match="fused=True"):
         run_batch("svrg", prob, grid={"stepsize": 1e-3, "p": 0.1},
                   num_steps=5, fused=True)
+
+
+def test_client_shard_requires_declared_support(prob):
+    """A problem that has not declared the client-axis sharding contract
+    (client-major leaves, benign zero-pad rows) is rejected at trace time
+    with an actionable message, not a shape error inside shard_map."""
+    from repro.problems.quadratic import QuadraticProblem
+
+    class UndeclaredProblem(QuadraticProblem):
+        client_shardable = False
+
+    bad = UndeclaredProblem(A=prob.A, b=prob.b)
+    with pytest.raises(ValueError, match="client_shardable"):
+        run_batch("svrp", bad, grid={"eta": 0.1, "p": 0.1}, num_steps=5,
+                  shard="clients")
+
+
+def test_client_shard_fused_rejects_non_rounds_algo(prob, cases):
+    """fused=True + shard='clients' is the per-device Pallas tile path of the
+    rounds-defined algorithms only; Catalyst's nested stages are rejected
+    with a clear error instead of failing inside the device-local view."""
+    _, kw = cases["catalyzed_svrp"]
+    with pytest.raises(ValueError, match="rounds-defined"):
+        run_batch("catalyzed_svrp", prob, fused=True, shard="clients", **kw)
