@@ -51,6 +51,12 @@ GATED = (
     # the quadratic headline; also carries an absolute >= 0.7x floor in the
     # baseline (the acceptance line for the session layer).
     "session_step_vs_scan",
+    # Comm-channel layer: deep SVRP's quant8 wire must keep its bytes-per-
+    # round at <= 0.27x of the float32 wire, measured from the engine's own
+    # int64 ledger (BatchResult.comm_bytes).  Recorded as the inverse saving
+    # ratio (bigger is better, like every other gated ratio); the baseline
+    # carries the acceptance line as an absolute floor of 3.704x (= 1/0.27).
+    "deep_svrp_quant8_bytes_saving",
 )
 # NOT gated: minibatch_fused_vs_loop (interpret-mode Pallas on CPU is an
 # emulation, not the compiled kernel; recorded for the trajectory only) and

@@ -19,7 +19,13 @@ client); this benchmark realizes that workload end-to-end:
    curves overlaid on engine measurements (`comm_to_accuracy`) for SPPM and
    SVRP across a similarity grid on exact-constant quadratics, including the
    Theorem-3 separation: SVRP wins when delta/mu is small, SPPM's
-   sigma_*^2-driven rate wins when delta/mu is large.
+   sigma_*^2-driven rate wins when delta/mu is large.  The same panel is
+   recorded on the BYTES ledger: `predict_comm_bytes_for` (Section-4.2
+   counts x the static wire price) against `BatchResult.bytes_to_accuracy`
+   — exactly commensurable, since every counted exchange is one d-vector
+   priced at the same `channel.wire_vector_bytes` the engine uses, so the
+   predicted/measured ratio must be IDENTICAL on both axes (asserted in the
+   smoke run).
 
     PYTHONPATH=src python -m benchmarks.dp_privacy_utility [--quick]
 
@@ -38,7 +44,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import measure_constants, predict_comm_for
+from repro.core import measure_constants, predict_comm_bytes_for, predict_comm_for
 from repro.experiments import run_batch
 from repro.problems import make_dp_a9a_problem, make_synthetic_quadratic
 
@@ -109,12 +115,16 @@ def predicted_vs_measured(quick: bool) -> list[dict]:
         consts = measure_constants(prob, x0=x0)
         for algo, steps in (("sppm", sppm_steps), ("svrp", svrp_steps)):
             predicted = predict_comm_for(prob, algo, eps=eps, constants=consts)
+            predicted_bytes = predict_comm_bytes_for(
+                prob, algo, eps=eps, constants=consts
+            )
             res = run_batch(
                 algo, prob, stepsize="theory", target_eps=eps,
                 theory_constants=consts, seeds=seeds,
                 num_steps=steps, prox_solver="spectral", x0=x0,
             )
             c2a = res.comm_to_accuracy(eps)
+            b2a = res.bytes_to_accuracy(eps)
             rows.append({
                 "delta": delta,
                 "algo": algo,
@@ -123,6 +133,10 @@ def predicted_vs_measured(quick: bool) -> list[dict]:
                 "measured_comm_median": float(np.median(c2a)),
                 "measured_comm_q25": float(np.percentile(c2a, 25)),
                 "measured_comm_q75": float(np.percentile(c2a, 75)),
+                "predicted_bytes": float(predicted_bytes),
+                "measured_bytes_median": float(np.median(b2a)),
+                "measured_bytes_q25": float(np.percentile(b2a, 25)),
+                "measured_bytes_q75": float(np.percentile(b2a, 75)),
             })
             print(
                 f"delta={delta:<5g} {algo:<5} predicted={predicted:12.0f} "
@@ -170,3 +184,11 @@ if __name__ == "__main__":
     # (smaller eps) and worse utility.  Hold that shape in the smoke too.
     eps_list = [r["eps"] for r in out["frontier"]]
     assert eps_list == sorted(eps_list, reverse=True), "eps must fall as sigma grows"
+    # The bytes panel is the comm panel under one static wire price, on BOTH
+    # sides — so predicted/measured must agree between axes wherever finite.
+    for r in out["panel"]:
+        if np.isfinite(r["measured_comm_median"]):
+            scale = r["measured_bytes_median"] / r["measured_comm_median"]
+            np.testing.assert_allclose(
+                r["predicted_bytes"], r["predicted_comm"] * scale, rtol=1e-12
+            )

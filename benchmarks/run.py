@@ -70,8 +70,8 @@ def main() -> None:
     t0 = time.perf_counter()
     rows = table1_comm.run(quick=quick)
     dt = (time.perf_counter() - t0) * 1e6
-    for M, delta, method, comm in rows:
-        print(f"table1/M{M}_d{delta:g}/{method},{dt / max(len(rows), 1):.0f},comm_to_eps={comm:.3g}")
+    for M, delta, method, nbytes in rows:
+        print(f"table1/M{M}_d{delta:g}/{method},{dt / max(len(rows), 1):.0f},bytes_to_eps={nbytes:.3g}")
     sys.stdout.flush()
 
     # ---- beyond-paper: federated deep-LM comparison ------------------------

@@ -74,9 +74,26 @@ measures substrate overhead, not scaling (docs/BENCHMARKS.md lists this with
 the other CPU caveats).  `client_shard_vs_batch_M256` records the same-sweep
 ratio against the plain batched engine.
 
+Comm-bytes frontier (`comm_bytes` in the JSON): engine-measured
+bytes-on-the-wire per round per (algo, channel) on a float32 quadratic at
+dim=512 — large enough that quant8's blockwise-scale overhead amortizes to
+its asymptotic 0.254x of the float32 wire.  The gated ratio
+`deep_svrp_quant8_bytes_saving` = float32 bytes-per-round / quant8
+bytes-per-round for deep SVRP, with an absolute floor of 3.704x in the
+baseline (= the acceptance line "quant8 <= 0.27x float32 bytes-per-round").
+Both sides are the engine's own int64 ledger (`BatchResult.comm_bytes`), not
+a closed-form recomputation.
+
+Real-model record (`fed_lm_20m`, written under ``--fed-lm`` / ``--full``):
+the 20m-preset federated transformer (examples/fed_transformer.py's preset)
+through `run_batch("deep_svrp", ...)` with channel="quant8" vs None — the
+loss trajectories (the engine's dist_sq column is the across-client mean LM
+loss) and the measured bytes ratio, recording that the quantized wire
+CONVERGES on the real-model path, not just that it is small.
+
 CLI (the CI bench job's entry point):
 
-    python -m benchmarks.sweep_bench --json BENCH_sweep.json [--full]
+    python -m benchmarks.sweep_bench --json BENCH_sweep.json [--full] [--fed-lm]
 
 writes the timings + speedup ratios as machine-readable JSON, gated against
 the checked-in baseline AND the recorded repo-root trajectory by
@@ -251,7 +268,84 @@ def _client_scale(quick: bool) -> tuple[dict, dict]:
     return record, ratios
 
 
-def run_structured(quick: bool = False) -> dict:
+def _comm_bytes_section() -> tuple[dict, dict]:
+    """Bytes-on-the-wire per round per (algo, channel), from the engine's own
+    int64 ledger on a float32 quadratic at dim=512 (quant8's block-scale
+    overhead amortized to its asymptotic ratio).  Returns the record and the
+    gated `deep_svrp_quant8_bytes_saving` ratio."""
+    M, dim, steps, n_seeds = 8, 512, 30, 2
+    prob = make_synthetic_quadratic(num_clients=M, dim=dim, mu=1.0, L=100.0,
+                                    delta=4.0, seed=0, dtype=jnp.float32)
+    mu = float(prob.strong_convexity())
+    delta = float(prob.similarity())
+    L = float(prob.smoothness_max())
+    jobs = {
+        "deep_svrp": dict(
+            grid={"eta": 0.5, "local_lr": 0.8 / (L + 2.0), "anchor_prob": 0.25},
+            local_steps=2,
+        ),
+        "svrp": dict(grid={"eta": theorem2_stepsize(mu, delta), "p": 1 / M},
+                     prox_solver="spectral"),
+        "sppm": dict(grid={"eta": 0.05}, prox_solver="spectral"),
+    }
+    bytes_per_round: dict[str, dict[str, float]] = {}
+    for algo, kw in jobs.items():
+        bytes_per_round[algo] = {}
+        for channel in (None, "quant8", "cast"):
+            res = run_batch(algo, prob, seeds=n_seeds, num_steps=steps,
+                            channel=channel, **kw)
+            total = jnp.median(jnp.asarray(res.comm_bytes[:, -1]))
+            bytes_per_round[algo][channel or "none"] = float(total) / steps
+    deep = bytes_per_round["deep_svrp"]
+    ratios = {"deep_svrp_quant8_bytes_saving": deep["none"] / deep["quant8"]}
+    record = {
+        "M": M, "dim": dim, "num_steps": steps, "seeds": n_seeds,
+        "dtype": "float32",
+        "bytes_per_round": bytes_per_round,
+        "deep_svrp_quant8_vs_f32_ratio": deep["quant8"] / deep["none"],
+    }
+    return record, ratios
+
+
+def _fed_lm_20m() -> dict:
+    """The real-model deep-SVRP payoff: the 20m-preset federated transformer
+    through `run_batch(..., channel="quant8")` vs the float32 wire.  Records
+    the loss trajectories (dist_sq = across-client mean LM loss) and the
+    measured bytes ratio — convergence evidence, not just wire math."""
+    import dataclasses
+
+    from repro.configs import REGISTRY
+    from repro.problems import make_fed_lm_problem
+
+    rounds, clients = 6, 4
+    cfg = dataclasses.replace(
+        REGISTRY["llama3.2-3b"].reduced(),
+        num_layers=6, d_model=384, num_heads=6, num_kv_heads=2, head_dim=64,
+        d_ff=1024, vocab_size=8192, param_dtype="float32",
+        compute_dtype="float32",
+    )
+    problem, x0 = make_fed_lm_problem(
+        cfg, num_clients=clients, per_client_batch=2, seq_len=128,
+        alpha=0.3, seed=0,
+    )
+    out: dict = {"preset": "20m", "dim": int(problem.dim), "rounds": rounds,
+                 "clients": clients}
+    for channel in ("quant8", None):
+        res = run_batch(
+            "deep_svrp", problem,
+            grid={"eta": 1.0, "local_lr": 0.2, "anchor_prob": 0.25},
+            seeds=[0], num_steps=rounds, local_steps=2, channel=channel,
+            x0=x0, x_star=x0,
+        )
+        key = channel or "none"
+        out[f"loss_{key}"] = [float(v) for v in jnp.asarray(res.dist_sq)[0]]
+        out[f"total_bytes_{key}"] = int(res.comm_bytes[0, -1])
+    out["bytes_ratio"] = out["total_bytes_quant8"] / out["total_bytes_none"]
+    out["quant8_converges"] = out["loss_quant8"][-1] < out["loss_quant8"][0]
+    return out
+
+
+def run_structured(quick: bool = False, fed_lm: bool = False) -> dict:
     """All timings + derived speedup ratios as one JSON-ready dict."""
     M, dim = 32, 16
     num_steps = 400 if quick else 1000
@@ -370,8 +464,10 @@ def run_structured(quick: bool = False) -> dict:
         )
     client_scale, client_ratios = _client_scale(quick)
     speedups.update(client_ratios)
+    comm_bytes, byte_ratios = _comm_bytes_section()
+    speedups.update(byte_ratios)
 
-    return {
+    out = {
         "bench": "sweep_bench",
         "algo": "svrp",
         "config": {"M": M, "dim": dim, "num_steps": num_steps, "seeds": n_seeds, "B": B},
@@ -381,7 +477,11 @@ def run_structured(quick: bool = False) -> dict:
         "cold_compile_s": cold_s,
         "speedups": speedups,
         "client_scale": client_scale,
+        "comm_bytes": comm_bytes,
     }
+    if fed_lm:
+        out["fed_lm_20m"] = _fed_lm_20m()
+    return out
 
 
 def _rows_from(data: dict) -> list:
@@ -419,6 +519,23 @@ def _rows_from(data: dict) -> list:
         f"session_B{B}", data["timings_us"]["session/spectral"],
         f"session_step_vs_scan={sp['session_step_vs_scan']:.2f}x",
     ))
+    cb = data.get("comm_bytes")
+    if cb:
+        deep = cb["bytes_per_round"]["deep_svrp"]
+        rows.append((
+            "comm_bytes_deep_svrp",
+            deep["quant8"],
+            f"f32={deep['none']:.0f}B/round;quant8={deep['quant8']:.0f}B/round;"
+            f"saving={sp['deep_svrp_quant8_bytes_saving']:.2f}x",
+        ))
+    fl = data.get("fed_lm_20m")
+    if fl:
+        rows.append((
+            "fed_lm_20m_quant8",
+            fl["total_bytes_quant8"],
+            f"loss={fl['loss_quant8'][0]:.3f}->{fl['loss_quant8'][-1]:.3f};"
+            f"bytes_ratio={fl['bytes_ratio']:.4f}",
+        ))
     cs = data.get("client_scale")
     if cs:
         curve = cs["rounds_per_s_vs_M"]
@@ -443,11 +560,14 @@ def run(quick: bool = False):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale timing (slow)")
+    ap.add_argument("--fed-lm", action="store_true",
+                    help="also run the 20m-preset federated transformer "
+                         "record (minutes on CPU; implied by --full)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write machine-readable results to PATH")
     args = ap.parse_args()
 
-    data = run_structured(quick=not args.full)
+    data = run_structured(quick=not args.full, fed_lm=args.fed_lm or args.full)
     print("name,us_per_call,derived")
     for name, us, derived in _rows_from(data):
         print(f"{name},{us:.0f},{derived}")

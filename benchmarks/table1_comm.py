@@ -1,20 +1,30 @@
-"""Table 1 realized empirically: communication steps to reach eps for every
+"""Table 1 realized empirically — in BYTES: wire bytes to reach eps for every
 method, across a (delta, M) grid — the complexity separations the paper
-proves (SVRP's M + delta^2/mu^2 vs the sqrt(delta/mu) M family).
+proves (SVRP's M + delta^2/mu^2 vs the sqrt(delta/mu) M family), priced the
+way a deployment pays for them.
 
 Every method runs through the batched experiment engine (`run_batch`) like
 fig1/fig2: the stochastic methods (SVRP / Catalyzed SVRP / SVRG) are
-multi-seed sweeps — one jit per method per panel, comm-to-eps is the MEDIAN
+multi-seed sweeps — one jit per method per panel, bytes-to-eps is the MEDIAN
 over the seed axis with the IQR recorded alongside — and the deterministic
 full-participation baselines (DANE / Accelerated Extragradient) are
 single-trial engine runs, now that all five share the ALGOS registry.
 
+Bytes come from the engine's int64 ledger (`BatchResult.comm_bytes` /
+`bytes_to_accuracy`), predictions from `core.theory.predict_comm_bytes_for`
+(Section-4.2 exchange counts x the channel's static wire price) — the two
+sides are exactly commensurable because every counted exchange is one
+d-vector.  The vector-count column (`comm_to_eps`) is kept as the derived
+view; the quantized-wire frontier itself (quant8 vs float32 bytes-per-round)
+lives in BENCH_sweep.json via benchmarks/sweep_bench.py.
+
     PYTHONPATH=src python -m benchmarks.table1_comm [--quick]
 
 Writes experiments/table1/comm_to_eps.csv with columns
-M,delta,method,comm_to_eps,comm_q25,comm_q75 (comm_to_eps = seed-median;
-inf = never reached).  `--quick` is the CI smoke configuration (two panels,
-reduced seed count).
+M,delta,method,comm_to_eps,comm_q25,comm_q75,predicted_comm,bytes_to_eps,
+bytes_q25,bytes_q75,predicted_bytes (medians over seeds; inf = never
+reached).  `--quick` is the CI smoke configuration (two panels, reduced seed
+count).
 """
 from __future__ import annotations
 
@@ -30,6 +40,7 @@ from repro.core import (
     THEORY,
     catalyst_inner_iterations,
     measure_constants,
+    predict_comm_bytes_for,
     predict_comm_for,
 )
 from repro.experiments import run_batch
@@ -42,10 +53,10 @@ SEEDS_FULL = 5
 
 
 def comm_to_eps(prob, seeds: int):
-    """{method: (median, q25, q75, predicted) communication steps to reach
-    EPS} — predicted from the `core.theory` table where the paper states a
-    rate (NaN for the baselines), so the CSV doubles as the
-    predicted-vs-measured record."""
+    """{method: (median, q25, q75, predicted) steps AND (median, q25, q75,
+    predicted) BYTES to reach EPS} — predicted from the `core.theory` table
+    where the paper states a rate (NaN for the baselines), so the CSV doubles
+    as the predicted-vs-measured record on both axes."""
     mu = float(prob.strong_convexity())
     dmax = float(prob.similarity_max())
     L = float(prob.smoothness_max())
@@ -78,16 +89,25 @@ def comm_to_eps(prob, seeds: int):
     out = {}
     for method, res in runs.items():
         c2a = res.comm_to_accuracy(EPS)  # (B,), inf if never reached
+        b2a = res.bytes_to_accuracy(EPS)  # (B,) wire bytes, same convention
+        has_rate = method in THEORY and THEORY[method].comm is not None
         predicted = (
             predict_comm_for(prob, method, eps=EPS, constants=consts)
-            if method in THEORY and THEORY[method].comm is not None
-            else float("nan")
+            if has_rate else float("nan")
+        )
+        predicted_bytes = (
+            predict_comm_bytes_for(prob, method, eps=EPS, constants=consts)
+            if has_rate else float("nan")
         )
         out[method] = (
             float(np.median(c2a)),
             float(np.percentile(c2a, 25)),
             float(np.percentile(c2a, 75)),
             predicted,
+            float(np.median(b2a)),
+            float(np.percentile(b2a, 25)),
+            float(np.percentile(b2a, 75)),
+            predicted_bytes,
         )
     return out
 
@@ -106,13 +126,14 @@ def run(quick: bool = False):
         prob = make_synthetic_quadratic(num_clients=M, dim=30, mu=1.0, L=1500.0,
                                         delta=delta, seed=0)
         res = comm_to_eps(prob, seeds=seeds)
-        for method, (med, lo, hi, predicted) in res.items():
-            rows.append((M, delta, method, med))
-            csv_rows.append((M, delta, method, med, lo, hi, predicted))
+        for method, vals in res.items():
+            rows.append((M, delta, method, vals[4]))  # median bytes-to-eps
+            csv_rows.append((M, delta, method, *vals))
     with open(os.path.join(OUT, "comm_to_eps.csv"), "w") as f:
-        f.write("M,delta,method,comm_to_eps,comm_q25,comm_q75,predicted_comm\n")
-        for M, d, m, med, lo, hi, pred in csv_rows:
-            f.write(f"{M},{d},{m},{med},{lo},{hi},{pred}\n")
+        f.write("M,delta,method,comm_to_eps,comm_q25,comm_q75,predicted_comm,"
+                "bytes_to_eps,bytes_q25,bytes_q75,predicted_bytes\n")
+        for row in csv_rows:
+            f.write(",".join(str(v) for v in row) + "\n")
     return rows
 
 

@@ -90,6 +90,7 @@ def catalyzed_svrp_scan(
     prox_solver: str = "exact",
     prox_steps: int = 50,
     prox_tol: float = 1e-10,
+    channel: str | None = None,
 ) -> RunResult:
     """Catalyzed SVRP as a single nested scan (outer loop traced, not host-side).
 
@@ -119,7 +120,7 @@ def catalyzed_svrp_scan(
         res = svrp_scan(
             h_t, x_prev, x_star, key_t, inner_hp,
             num_steps=inner_steps, prox_solver=prox_solver, prox_steps=prox_steps,
-            prox_tol=prox_tol, prox_factors=pf,
+            prox_tol=prox_tol, prox_factors=pf, channel=channel,
         )
         x_t = res.x_final
 
@@ -139,7 +140,10 @@ def catalyzed_svrp_scan(
 
 _catalyzed_svrp_jit = jax.jit(
     catalyzed_svrp_scan,
-    static_argnames=("num_outer", "inner_steps", "prox_solver", "prox_steps", "prox_tol"),
+    static_argnames=(
+        "num_outer", "inner_steps", "prox_solver", "prox_steps", "prox_tol",
+        "channel",
+    ),
 )
 
 
@@ -154,6 +158,7 @@ def catalyzed_step_def(
     prox_solver: str = "exact",
     prox_steps: int = 50,
     prox_tol: float = 1e-10,
+    channel: str | None = None,
 ):
     """Catalyzed SVRP as an incrementally steppable unit (`core.types.StepDef`)
     for the online session layer (`repro.serve.FedSession`).
@@ -191,15 +196,17 @@ def catalyzed_step_def(
         return make_registry_ops(
             "svrp", h_t, x0, x_star, inner_hp, batched=False,
             prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
-            prox_factors=pf,
+            prox_factors=pf, channel=channel,
         )
 
     def _stage_init(ops, x):
-        st = rdef.init(ops, x)
-        # Anchor the inner comm counter to int32 (the value a round's
-        # `+ 3M * c.astype(int32)` promotes it to anyway) so the lax.cond
-        # re-init branch and the carried state agree on dtype.
-        return st[:-1] + (st[-1].astype(jnp.int32),)
+        # Inner SVRP state is (x, w, gbar, comm, channel_state).  Anchor the
+        # comm counter to int32 (the value a round's `+ 3M * c.astype(int32)`
+        # promotes it to anyway) so the lax.cond re-init branch and the
+        # carried state agree on dtype; the channel state (EF residual)
+        # re-initializes with each stage, matching the nested scan.
+        x_i, w_i, g_i, comm_i, ch_i = rdef.init(ops, x)
+        return (x_i, w_i, g_i, comm_i.astype(jnp.int32), ch_i)
 
     def init():
         return (

@@ -164,6 +164,7 @@ def deep_svrp_scan(
     *,
     num_steps: int,
     local_steps: int = 4,
+    channel: str | None = None,
 ) -> RunResult:
     """DeepSVRP's full-participation pod schedule on a convex problem.
 
@@ -193,7 +194,7 @@ def deep_svrp_scan(
     # rounds.make_registry_ops, shared with the batched/incremental substrates.
     ops = make_registry_ops(
         "deep_svrp", problem, x0, x_star, hp, batched=False,
-        local_steps=local_steps,
+        local_steps=local_steps, channel=channel,
     )
     return scan_rounds(ROUND_DEFS["deep_svrp"], ops, x0, key, num_steps)
 

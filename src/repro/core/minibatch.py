@@ -58,6 +58,7 @@ def svrp_minibatch_scan(
     prox_solver: str = "exact",
     prox_steps: int = 50,
     prox_tol: float = 1e-10,
+    channel: str | None = None,
 ) -> RunResult:
     """SVRP with b = batch_clients sampled clients per round.
 
@@ -68,7 +69,7 @@ def svrp_minibatch_scan(
     ops = make_registry_ops(
         "svrp_minibatch", problem, x0, x_star, hp, batched=False,
         prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
-        batch_clients=batch_clients,
+        batch_clients=batch_clients, channel=channel,
     )
     return scan_rounds(ROUND_DEFS["svrp_minibatch"], ops, x0, key, num_steps)
 

@@ -83,6 +83,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.channel import get_channel
 from repro.core.types import RunResult
 
 
@@ -125,6 +126,7 @@ class RoundOps:
         full_grad: Callable | None = None,
         uniform_client_fn: Callable | None = None,
         sample_cohort_fn: Callable | None = None,
+        channel=None,
     ):
         self.problem = problem
         self.hp = hp
@@ -133,6 +135,9 @@ class RoundOps:
         self.batched = batched
         self.B = num_trials
         self.M = problem.num_clients
+        # The comm channel every client<->server transfer flows through
+        # (None -> identity: bit-exact passthrough).  Static per binding.
+        self.channel = get_channel(channel)
         self.prox = prox
         self.cohort_prox = cohort_prox
         self.cohort_size = cohort_size
@@ -282,7 +287,45 @@ class RoundOps:
             return jnp.asarray(n)
         return jnp.full((self.B,), n)
 
+    # ------------------------------------------------------------- channel
+    # The transfer seams every round body routes its payloads through.  With
+    # the identity channel all four are passthrough, so default trajectories
+    # are bit-identical to the pre-channel engine.
+
+    def chan_init(self, xB):
+        """Round-0 channel state (quant8's EF residual), shaped like the
+        broadcast payload.  Replicated per-trial state on every substrate."""
+        return self.channel.init_state(xB)
+
+    def chan_down(self, ch, x):
+        """Server -> client iterate broadcast — the one stateful link: the
+        quant8 channel transmits ``Q(x + e)`` and carries the residual."""
+        return self.channel.down(ch, x)
+
+    def chan_up(self, v):
+        """Client -> server payloads (prox results), stateless, compressed
+        row-independently along the last axis."""
+        return self.channel.up(v)
+
+    def chan_bcast(self, v):
+        """Anchor broadcast on refresh events, stateless: clients store the
+        anchor AS RECEIVED, so the cached anchor gradient stays consistent
+        with the anchor the clients actually hold."""
+        return self.channel.bcast(v)
+
+    def client_mean(self, y):
+        """Mean over the client axis of full-participation rows (DeepSVRP).
+        A substrate primitive so the client-sharded binding can assemble the
+        GLOBAL mean from resident rows with its one masked ``psum``."""
+        return jnp.mean(y, axis=-2)
+
     def dist_sq(self, x):
+        metric = getattr(self.problem, "metric", None)
+        if metric is not None:
+            # Problems without a computable minimizer (real-model federated
+            # fine-tunes) report their own scalar metric (e.g. full loss)
+            # in place of squared distance to x_star.
+            return metric(x) if not self.batched else jax.vmap(metric)(x)
         if not self.batched:
             return jnp.sum((x - self.x_star) ** 2)
         return jnp.sum((x - self.x_star[None]) ** 2, axis=-1)
@@ -308,18 +351,32 @@ def scan_rounds(rdef: RoundDef, ops: RoundOps, x0, key, num_steps: int) -> RunRe
 # sequential drivers by tests/test_substrates.py): one vector exchange
 # server<->client = 1 step; the initial anchor setup (broadcast w_0, gather M
 # gradients, broadcast the average) = 3M; a refresh re-runs that round.
+# Every counted vector is priced on the wire by the bound comm channel —
+# ``comm`` stays the step count, and the entry points derive the int64 bytes
+# ledger as steps x the channel's static per-vector wire size.
+#
+# Channel seams: the server iterate broadcast goes through ``chan_down`` (the
+# stateful/EF link — clients form their prox targets from the compressed
+# iterate they actually received), client->server prox results through
+# ``chan_up``, and the refresh anchor broadcast through ``chan_bcast`` (the
+# stored anchor is the compressed one the clients hold, so the cached anchor
+# gradient matches it).  The refresh event's client->server gradient gather
+# is PRICED in the 3M accounting but modeled lossless numerically — the
+# masked-sum + psum assembly stays one collective on the sharded substrate.
 
 
 def _sppm_init(ops: RoundOps, x0):
-    return (ops.tile(x0), ops.comm0(0))
+    xB = ops.tile(x0)
+    return (xB, ops.comm0(0), ops.chan_init(xB))
 
 
 def _sppm_round(ops: RoundOps, s, key_k):
-    x, comm = s
+    x, comm, ch = s
     m = ops.uniform_client(key_k)
-    x_next = ops.prox(m, x)
+    ch, x_d = ops.chan_down(ch, x)
+    x_next = ops.chan_up(ops.prox(m, x_d))
     comm = comm + 2  # server -> client (x_k), client -> server (x_{k+1})
-    return (x_next, comm), (ops.dist_sq(x_next), comm)
+    return (x_next, comm, ch), (ops.dist_sq(x_next), comm)
 
 
 def _svrp_init(ops: RoundOps, x0):
@@ -329,61 +386,64 @@ def _svrp_init(ops: RoundOps, x0):
     else:
         # x0 is trial-shared: compute the anchor gradient once and tile it.
         gbar = ops.init_full_grad(x0)
-    return (xB, xB, gbar, ops.comm0(3 * ops.M))
+    return (xB, xB, gbar, ops.comm0(3 * ops.M), ops.chan_init(xB))
 
 
 def _svrp_round(ops: RoundOps, s, key_k):
-    x, w, gbar, comm = s
+    x, w, gbar, comm, ch = s
     key_m, key_c = ops.split(key_k)
     m = ops.uniform_client(key_m)
 
+    ch, x_d = ops.chan_down(ch, x)
     g_k = gbar - ops.grad(m, w)
-    z = x - ops.vec(ops.hp.eta) * g_k
-    x_next = ops.prox(m, z)
+    z = x_d - ops.vec(ops.hp.eta) * g_k
+    x_next = ops.chan_up(ops.prox(m, z))
 
     c = ops.bernoulli(key_c, ops.hp.p)
-    w_next = ops.where_vec(c, x_next, w)
+    w_next = ops.where_vec(c, ops.chan_bcast(x_next), w)
     gbar_next = ops.refresh_grad(c, w_next, gbar)
     comm = comm + 2 + 3 * ops.M * ops.as_count(c)
-    return (x_next, w_next, gbar_next, comm), (ops.dist_sq(x_next), comm)
+    return (x_next, w_next, gbar_next, comm, ch), (ops.dist_sq(x_next), comm)
 
 
 def _svrp_minibatch_round(ops: RoundOps, s, key_k):
-    x, w, gbar, comm = s
+    x, w, gbar, comm, ch = s
     key_m, key_c = ops.split(key_k)
     ms = ops.sample_cohort(key_m)
 
+    ch, x_d = ops.chan_down(ch, x)
     g_k = ops.expand(gbar) - ops.cohort_grad(ms, w)
-    z = ops.expand(x) - ops.cvec(ops.hp.eta) * g_k
-    ys = ops.cohort_prox(ms, z)
+    z = ops.expand(x_d) - ops.cvec(ops.hp.eta) * g_k
+    ys = ops.chan_up(ops.cohort_prox(ms, z))
     x_next = jnp.mean(ys, axis=-2)
 
     c = ops.bernoulli(key_c, ops.hp.p)
-    w_next = ops.where_vec(c, x_next, w)
+    w_next = ops.where_vec(c, ops.chan_bcast(x_next), w)
     gbar_next = ops.refresh_grad(c, w_next, gbar)
     comm = comm + 2 * ops.cohort_size + 3 * ops.M * ops.as_count(c)
-    return (x_next, w_next, gbar_next, comm), (ops.dist_sq(x_next), comm)
+    return (x_next, w_next, gbar_next, comm, ch), (ops.dist_sq(x_next), comm)
 
 
 def _deep_svrp_round(ops: RoundOps, s, key_k):
     """DeepSVRP's full-participation pod round: every client is a cohort and
     all M step concurrently; the local solver is Algorithm 7 at an explicit
     stepsize (hp.local_lr), injected as ``ops.local_prox_gd``."""
-    x, w, gbar, comm = s
+    x, w, gbar, comm, ch = s
     clients = jnp.arange(ops.M)
 
+    ch, x_d = ops.chan_down(ch, x)
     g_k = ops.expand(gbar) - ops.cohort_grad(clients, w)
-    z = ops.expand(x) - ops.cvec(ops.hp.eta) * g_k
-    y = ops.local_prox_gd(z, x)
-    x_next = jnp.mean(y, axis=-2)
+    z = ops.expand(x_d) - ops.cvec(ops.hp.eta) * g_k
+    y = ops.local_prox_gd(z, x_d)
+    x_next = ops.client_mean(ops.chan_up(y))
 
     c = ops.bernoulli(key_k, ops.hp.anchor_prob)
-    w_next = ops.where_vec(c, x_next, w)
+    w_next = ops.where_vec(c, ops.chan_bcast(x_next), w)
     gbar_next = ops.refresh_grad(c, w_next, gbar)
     # Full participation: 2M per round (x down / y up for all cohorts) + a
     # Bernoulli-gated 2M for the anchor-gradient all-reduce.
     comm = comm + 2 * ops.M + 2 * ops.M * ops.as_count(c)
-    return (x_next, w_next, gbar_next, comm), (ops.dist_sq(x_next), comm)
+    return (x_next, w_next, gbar_next, comm, ch), (ops.dist_sq(x_next), comm)
 
 
 ROUND_DEFS: dict[str, RoundDef] = {
@@ -416,6 +476,7 @@ def make_registry_ops(
     local_steps: int | None = None, prox_factors=None,
     uniform_client_fn: Callable | None = None,
     sample_cohort_fn: Callable | None = None,
+    channel=None,
 ) -> RoundOps:
     """Bind one rounds-defined algorithm's substrate: registry prox solve +
     Algorithm-7 local loop, per trial (``batched=False``, the historical
@@ -439,6 +500,7 @@ def make_registry_ops(
     kw: dict[str, Any] = {
         "uniform_client_fn": uniform_client_fn,
         "sample_cohort_fn": sample_cohort_fn,
+        "channel": channel,
     }
 
     if algo == "deep_svrp":
@@ -552,7 +614,7 @@ def registry_batched_scan(
     algo: str, problem, x0, x_star, keys, hp, *,
     num_steps: int, prox_solver: str = "exact", prox_steps: int = 50,
     prox_tol: float = 1e-10, batch_clients: int | None = None,
-    local_steps: int | None = None,
+    local_steps: int | None = None, channel=None,
 ) -> RunResult:
     """Run one rounds-defined algorithm hand-batched with its registry prox
     solver vmapped per trial (per-trial eta/smoothness ride the vmap)."""
@@ -560,7 +622,7 @@ def registry_batched_scan(
         algo, problem, x0, x_star, hp,
         batched=True, num_trials=keys.shape[0],
         prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
-        batch_clients=batch_clients, local_steps=local_steps,
+        batch_clients=batch_clients, local_steps=local_steps, channel=channel,
     )
     return scan_rounds(ROUND_DEFS[algo], ops, x0, keys, num_steps)
 
@@ -675,12 +737,12 @@ def _rows(a):
 
 def _fused_ops(algo: str, problem, hp, x_star, x0, B: int, *,
                inner_steps: int, interpret: bool,
-               cohort_size: int | None = None) -> RoundOps:
+               cohort_size: int | None = None, channel=None) -> RoundOps:
     """Bind one algorithm's fused substrate: vmapped sampling + Pallas prox."""
     dtype = x0.dtype
     eta = jnp.broadcast_to(jnp.asarray(hp.eta, dtype), (B,))
     L = jnp.broadcast_to(jnp.asarray(getattr(hp, "smoothness", 0.0), dtype), (B,))
-    kw: dict[str, Any] = {"cohort_size": cohort_size}
+    kw: dict[str, Any] = {"cohort_size": cohort_size, "channel": channel}
 
     if algo in ("sppm", "svrp"):
         kw["prox"] = lambda m, z: prox_gd_fused(
@@ -743,11 +805,13 @@ def batched_scan(
             problem, x0, x_star, keys, hp,
             num_outer=static["num_outer"], num_steps=num_steps,
             inner_steps=inner_steps, interpret=interpret,
+            channel=static.get("channel"),
         )
     ops = _fused_ops(
         algo, problem, hp, x_star, x0, B,
         inner_steps=inner_steps, interpret=interpret,
         cohort_size=static.get("batch_clients"),
+        channel=static.get("channel"),
     )
     return scan_rounds(ROUND_DEFS[algo], ops, x0, keys, num_steps)
 
@@ -755,6 +819,7 @@ def batched_scan(
 def _catalyzed_batched_scan(
     problem, x0, x_star, keys, hp, *,
     num_outer: int, num_steps: int, inner_steps: int, interpret: bool,
+    channel=None,
 ) -> RunResult:
     """Catalyzed SVRP on the fused substrate: the outer Catalyst recurrence
     hand-batched over (B,) with the inner loop running the SHARED SVRP round
@@ -804,10 +869,16 @@ def _catalyzed_batched_scan(
 
         ops = RoundOps(
             problem, hp, x_star, dtype, batched=True, num_trials=B,
-            prox=prox, grad=grad_sh, full_grad=full_grad_sh,
+            prox=prox, grad=grad_sh, full_grad=full_grad_sh, channel=channel,
         )
 
-        state0 = (x_prev, x_prev, full_grad_sh(x_prev), ops.comm0(3 * M))
+        # Channel state (quant8's EF residual) re-initializes per stage,
+        # matching the sequential driver whose inner svrp_scan re-runs
+        # _svrp_init each stage.
+        state0 = (
+            x_prev, x_prev, full_grad_sh(x_prev),
+            ops.comm0(3 * M), ops.chan_init(x_prev),
+        )
         step_keys = ops.schedule_keys(keys_t, num_steps)
         final, (d2s, comms) = jax.lax.scan(
             lambda s, k: _svrp_round(ops, s, k), state0, step_keys
@@ -879,11 +950,12 @@ class ClientShardedOps(RoundOps):
     def __init__(
         self, local_problem, hp, x_star, dtype, *,
         axis: str, num_clients: int, valid, num_trials: int,
-        cohort_size: int | None = None,
+        cohort_size: int | None = None, channel=None,
     ):
         super().__init__(
             local_problem, hp, x_star, dtype,
             batched=True, num_trials=num_trials, cohort_size=cohort_size,
+            channel=channel,
         )
         self.axis = axis
         self.M_local = local_problem.num_clients
@@ -912,6 +984,15 @@ class ClientShardedOps(RoundOps):
         s = jnp.sum(jnp.where(self.valid[None, :, None], y, 0.0), axis=1)
         ybar = jax.lax.psum(s, self.axis) / self.M
         return jnp.broadcast_to(ybar[:, None, :], y.shape)
+
+    def client_mean(self, y):
+        """DeepSVRP's client mean over RESIDENT rows: masked local sum, the
+        round's one ``psum``, divide by the global M.  Channel compression of
+        the uplink commutes with this assembly: rows are compressed
+        independently BEFORE the mean on every substrate, and padding rows
+        are masked out of the sum here exactly as in the unsharded mean."""
+        s = jnp.sum(jnp.where(self.valid[None, :, None], y, 0.0), axis=1)
+        return jax.lax.psum(s, self.axis) / self.M
 
     # ------------------------------------------------------------- oracles
     def grad(self, m, y):
@@ -960,6 +1041,7 @@ def make_client_sharded_ops(
     fused: bool = False, inner_steps: int | None = None, interpret: bool = True,
     prox_solver: str = "exact", prox_steps: int = 50, prox_tol: float = 1e-10,
     batch_clients: int | None = None, local_steps: int | None = None,
+    channel=None,
 ) -> ClientShardedOps:
     """Bind one rounds-defined algorithm to the client-sharded substrate.
 
@@ -976,7 +1058,7 @@ def make_client_sharded_ops(
     ops = ClientShardedOps(
         local_problem, hp, x_star, dtype,
         axis=axis, num_clients=num_clients, valid=valid, num_trials=B,
-        cohort_size=batch_clients,
+        cohort_size=batch_clients, channel=channel,
     )
     eta = jnp.broadcast_to(jnp.asarray(hp.eta, dtype), (B,))
 
@@ -1005,7 +1087,10 @@ def make_client_sharded_ops(
                     )
 
                 y = jax.lax.fori_loop(0, inner_steps, body, y0)
-                return ops.mean_clients(y.reshape(z.shape))
+                # Raw resident rows: the round body's ``ops.client_mean``
+                # (one masked psum) assembles the global mean AFTER the
+                # uplink channel compresses each row.
+                return y.reshape(z.shape)
         else:
             from repro.kernels.ref import prox_update_batched as _prox_ref_b
 
@@ -1022,7 +1107,7 @@ def make_client_sharded_ops(
 
                 y0 = jnp.broadcast_to(x[:, None, :], z.shape)
                 y, _ = jax.lax.scan(local, y0, None, length=local_steps)
-                return ops.mean_clients(y)
+                return y  # rows; ops.client_mean assembles the global mean
 
         ops.local_prox_gd = local_prox_gd
         return ops

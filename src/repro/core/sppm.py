@@ -42,10 +42,12 @@ def sppm_scan(
     prox_solver: str = "exact",  # registry name: exact/spectral/gd/newton/newton-cg
     prox_steps: int = 50,
     prox_tol: float = 1e-10,
+    channel: str | None = None,
 ) -> RunResult:
     ops = make_registry_ops(
         "sppm", problem, x0, x_star, hp, batched=False,
         prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
+        channel=channel,
     )
     return scan_rounds(ROUND_DEFS["sppm"], ops, x0, key, num_steps)
 

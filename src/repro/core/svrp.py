@@ -59,6 +59,7 @@ def svrp_scan(
     prox_steps: int = 50,
     prox_tol: float = 1e-10,
     prox_factors=None,
+    channel: str | None = None,
 ) -> RunResult:
     """One SVRP trajectory as a pure lax.scan. Safe under jit AND vmap: no
     Python branching on traced values; `prox_solver` is static config resolved
@@ -79,7 +80,7 @@ def svrp_scan(
     ops = make_registry_ops(
         "svrp", problem, x0, x_star, hp, batched=False,
         prox_solver=prox_solver, prox_steps=prox_steps, prox_tol=prox_tol,
-        prox_factors=prox_factors,
+        prox_factors=prox_factors, channel=channel,
     )
     return scan_rounds(ROUND_DEFS["svrp"], ops, x0, key, num_steps)
 

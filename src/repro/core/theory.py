@@ -184,3 +184,50 @@ def predict_comm_for(problem, algo: str, *, eps: float = 1e-6,
         algo, mu=c.mu, delta=c.delta, M=c.M, eps=eps,
         sigma_star_sq=c.sigma_star_sq, r0_sq=c.r0_sq,
     )
+
+
+def predict_comm_bytes(
+    algo: str,
+    *,
+    mu: float,
+    delta: float,
+    M: int,
+    eps: float,
+    dim: int,
+    sigma_star_sq: float = 1.0,
+    r0_sq: float = 1.0,
+    channel: str | None = None,
+    itemsize: int = 4,
+) -> float:
+    """Predicted BYTES on the wire to reach eps: `predict_comm` (Section-4.2
+    vector-exchange counts) x the channel's static wire size for one
+    d-vector.  This is exact relative to the engine's measured ledger — every
+    counted exchange is one d-vector priced at the same
+    `channel.wire_vector_bytes` the entry points use — so predictions overlay
+    directly on `BatchResult.bytes_to_accuracy` axes."""
+    from repro.core.channel import wire_vector_bytes
+
+    steps = predict_comm(
+        algo, mu=mu, delta=delta, M=M, eps=eps,
+        sigma_star_sq=sigma_star_sq, r0_sq=r0_sq,
+    )
+    return steps * wire_vector_bytes(channel, dim, itemsize)
+
+
+def predict_comm_bytes_for(problem, algo: str, *, eps: float = 1e-6,
+                           x0=None, x_star=None,
+                           constants: ProblemConstants | None = None,
+                           channel: str | None = None) -> float:
+    """`predict_comm_bytes` with constants measured off a problem instance
+    (dim and dtype width come from the problem itself)."""
+    c = constants if constants is not None else measure_constants(problem, x0, x_star)
+    itemsize = 4
+    for attr in ("A", "Z"):
+        if hasattr(problem, attr):
+            itemsize = getattr(problem, attr).dtype.itemsize
+            break
+    return predict_comm_bytes(
+        algo, mu=c.mu, delta=c.delta, M=c.M, eps=eps, dim=int(problem.dim),
+        sigma_star_sq=c.sigma_star_sq, r0_sq=c.r0_sq,
+        channel=channel, itemsize=itemsize,
+    )

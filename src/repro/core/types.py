@@ -34,13 +34,22 @@ class StepDef(NamedTuple):
 class RunResult(NamedTuple):
     """Trajectory of a federated optimization run.
 
-    Communication accounting follows the paper exactly: one communication step
-    = one vector exchanged between the server and a single client (Section 5).
+    Communication is a BYTES ledger (``comm_bytes``): cumulative wire bytes,
+    each payload priced from its pytree leaf shapes x the bound comm
+    channel's wire dtype (`repro.core.channel`).  The paper's Section-4.2
+    count — one step = one vector exchanged between the server and a single
+    client — is kept as the derived ``comm`` column (bytes = steps x the
+    channel's static per-vector wire size, since every transferred payload
+    in the SPPM/SVRP family is one d-vector).  ``comm_bytes`` is int64 and
+    accumulated on the host by the entry points, outside any jit: at real
+    model sizes (~1e8 bytes/vector) an in-trace ledger would overflow JAX's
+    default int32 within a handful of rounds.
     """
 
     dist_sq: jax.Array  # (K,) squared distance to x_star after each iteration
     comm: jax.Array  # (K,) cumulative communication steps after each iteration
     x_final: jax.Array  # final iterate
+    comm_bytes: jax.Array | None = None  # (K,) cumulative wire bytes (int64)
 
     def comm_to_accuracy(self, eps: float) -> jax.Array:
         """First cumulative-communication count at which dist_sq <= eps.
@@ -53,3 +62,18 @@ class RunResult(NamedTuple):
         idx = jnp.argmax(hit)  # first True, or 0 if none
         reached = jnp.any(hit)
         return jnp.where(reached, self.comm[idx], jnp.inf)
+
+    def bytes_to_accuracy(self, eps: float):
+        """First cumulative wire-bytes count at which dist_sq <= eps (+inf if
+        never reached; requires the entry point to have attached the ledger)."""
+        import jax.numpy as jnp
+
+        if self.comm_bytes is None:
+            raise ValueError(
+                "this RunResult carries no bytes ledger — run it through "
+                "run_batch/run_sequential/open_session, which attach comm_bytes"
+            )
+        hit = self.dist_sq <= eps
+        idx = jnp.argmax(hit)
+        reached = jnp.any(hit)
+        return jnp.where(reached, self.comm_bytes[idx], jnp.inf)

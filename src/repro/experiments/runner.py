@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.channel import wire_vector_bytes
 from repro.core.rounds import (
     ROUND_DEFS,
     batched_scan,
@@ -111,6 +112,7 @@ class BatchResult(NamedTuple):
     hparams: dict[str, np.ndarray]  # each (B,)
     seeds: np.ndarray  # (B,)
     stopped_round: np.ndarray | None = None  # (B,) — early-stopping path only
+    comm_bytes: np.ndarray | None = None  # (B, K) int64 wire-bytes ledger
 
     @property
     def num_trials(self) -> int:
@@ -118,7 +120,8 @@ class BatchResult(NamedTuple):
 
     def trial(self, i: int) -> RunResult:
         """Trial i as a plain RunResult (comparable to the sequential driver)."""
-        return RunResult(self.dist_sq[i], self.comm[i], self.x_final[i])
+        cb = None if self.comm_bytes is None else self.comm_bytes[i]
+        return RunResult(self.dist_sq[i], self.comm[i], self.x_final[i], cb)
 
     def labels(self) -> list[dict[str, float]]:
         return trial_labels(self.hparams, self.seeds)
@@ -130,6 +133,23 @@ class BatchResult(NamedTuple):
                 self.dist_sq, self.comm
             )
         )
+
+    def bytes_to_accuracy(self, eps: float) -> np.ndarray:
+        """(B,) first cumulative WIRE BYTES at which dist_sq <= eps (inf if
+        never) — the bytes-ledger analog of `comm_to_accuracy`."""
+        if self.comm_bytes is None:
+            raise ValueError(
+                "comm_bytes is not populated; run through run_batch/"
+                "run_sequential/open_session, which attach the bytes ledger"
+            )
+        d2 = np.asarray(self.dist_sq)
+        by = np.asarray(self.comm_bytes, dtype=np.float64)
+        hit = d2 <= eps
+        out = np.full(d2.shape[0], np.inf)
+        for i in range(d2.shape[0]):
+            if hit[i].any():
+                out[i] = by[i, int(np.argmax(hit[i]))]
+        return out
 
     def final_at_budget(self, budget: int) -> float:
         """Median over trials of dist_sq at the LAST step with comm <= budget
@@ -149,12 +169,35 @@ class BatchResult(NamedTuple):
         d2 = np.asarray(self.dist_sq)
         comm = np.asarray(self.comm)
         lo, hi = q
-        return {
+        out = {
             "dist_sq_median": np.median(d2, axis=0),
             "dist_sq_q_lo": np.percentile(d2, lo, axis=0),
             "dist_sq_q_hi": np.percentile(d2, hi, axis=0),
             "comm_median": np.median(comm, axis=0),
         }
+        if self.comm_bytes is not None:
+            out["comm_bytes_median"] = np.median(
+                np.asarray(self.comm_bytes), axis=0
+            )
+        return out
+
+
+def ledger_bytes(cfg: Mapping[str, Any], x0: jax.Array, comm) -> np.ndarray:
+    """The integer bytes-on-the-wire ledger for a (B, K) (or (K,)) cumulative
+    comm trajectory: every counted exchange in the rounds family is one
+    d-vector, so bytes = comm x the channel's wire size for that vector.
+
+    Computed HOST-SIDE in int64 by the entry points (run_batch /
+    run_sequential / FedSession / FedRoundServer) rather than inside the
+    traced scan: an in-trace int32 ledger overflows within a handful of
+    rounds at 20m-model payloads (~6e7 wire bytes per vector), and the
+    product is exact because the wire size is static per (channel, d, dtype).
+    Algorithms without a channel knob price at the identity wire size
+    (d x itemsize)."""
+    wire = wire_vector_bytes(
+        cfg.get("channel"), int(np.prod(x0.shape)), x0.dtype.itemsize
+    )
+    return np.asarray(comm, dtype=np.int64) * np.int64(wire)
 
 
 def _one_trial_fn(scan_fn: Callable, static_items: tuple) -> Callable:
@@ -331,6 +374,7 @@ def run_batch(
             x_final=res.x_final,
             hparams=hparams,
             seeds=seed_arr,
+            comm_bytes=ledger_bytes(cfg, x0, res.comm),
         )
     if fused:
         # Registry-prox algos fuse only their "gd" path; deep_svrp's local
@@ -366,6 +410,7 @@ def run_batch(
         x_final=res.x_final,
         hparams=hparams,
         seeds=seed_arr,
+        comm_bytes=ledger_bytes(cfg, x0, res.comm),
     )
 
 
@@ -402,12 +447,14 @@ def run_sequential(
     for i in range(seed_arr.shape[0]):
         hp = spec.params_cls(**{k: v[i] for k, v in dev_hp.items()})
         results.append(single(problem, x0, x_star, jax.random.key(int(seed_arr[i])), hp))
+    comm = jnp.stack([r.comm for r in results])
     return BatchResult(
         dist_sq=jnp.stack([r.dist_sq for r in results]),
-        comm=jnp.stack([r.comm for r in results]),
+        comm=comm,
         x_final=jnp.stack([r.x_final for r in results]),
         hparams=hparams,
         seeds=seed_arr,
+        comm_bytes=ledger_bytes(cfg, x0, comm),
     )
 
 
@@ -487,7 +534,7 @@ def _client_body(
             spec = ALGOS[algo]
             inner_steps = cfg[spec.fused_inner_steps]
             num_steps = cfg[spec.fused_round_steps]
-            extra = {k: cfg[k] for k in ("batch_clients",) if k in cfg}
+            extra = {k: cfg[k] for k in ("batch_clients", "channel") if k in cfg}
 
             def run(local_problem, valid, x0, x_star, keys, hp):
                 return client_sharded_scan(
@@ -584,7 +631,7 @@ def _fused_body(algo: str, static_items: tuple, interpret: bool) -> Callable:
     cfg = dict(static_items)
     inner_steps = cfg[spec.fused_inner_steps]
     num_steps = cfg[spec.fused_round_steps]
-    extra = {k: cfg[k] for k in ("batch_clients", "num_outer") if k in cfg}
+    extra = {k: cfg[k] for k in ("batch_clients", "num_outer", "channel") if k in cfg}
 
     def run(problem, x0, x_star, keys, hp):
         return batched_scan(

@@ -46,6 +46,7 @@ from repro.core.baselines import (
     svrg_scan,
 )
 from repro.core.catalyst import CatalyzedSVRPParams, catalyzed_svrp_scan
+from repro.core.channel import get_channel
 from repro.core.composite import CompositeSVRPParams, composite_svrp_scan
 from repro.core.deep import DeepSVRPScanParams, deep_svrp_scan
 from repro.core.minibatch import MinibatchParams, svrp_minibatch_scan
@@ -89,6 +90,7 @@ _PROX_STATIC = {
     "prox_solver": "exact",
     "prox_steps": 50,
     "prox_tol": 1e-10,
+    "channel": None,
 }
 
 ALGOS: dict[str, AlgoSpec] = {
@@ -117,6 +119,7 @@ ALGOS: dict[str, AlgoSpec] = {
         static={
             "num_outer": _REQUIRED, "inner_steps": _REQUIRED,
             "prox_solver": "exact", "prox_steps": 50, "prox_tol": 1e-10,
+            "channel": None,
         },
         fusable=True, fused_inner_steps="prox_steps",
         fused_round_steps="inner_steps",  # per-stage round count (nested scan)
@@ -164,7 +167,7 @@ ALGOS: dict[str, AlgoSpec] = {
     "deep_svrp": AlgoSpec(
         DeepSVRPScanParams, deep_svrp_scan,
         defaults={"eta": _REQUIRED, "local_lr": _REQUIRED, "anchor_prob": _REQUIRED},
-        static={"num_steps": _REQUIRED, "local_steps": 4},
+        static={"num_steps": _REQUIRED, "local_steps": 4, "channel": None},
         # its local solver IS Algorithm 7 (no prox_solver switch)
         fusable=True, fused_inner_steps="local_steps",
     ),
@@ -301,6 +304,10 @@ class RunSpec:
             # a logistic problem must fail HERE with a clear message, not as an
             # attribute/shape error deep inside the vmapped scan.
             get_prox_solver(cfg["prox_solver"], problem)
+        if "channel" in cfg:
+            # Same early validation for comm-channel names: an unknown channel
+            # fails here with the registry's message, not inside the scan.
+            get_channel(cfg["channel"])
         if cfg.get("prox_solver") == "gd":
             if "smoothness" not in aspec.params_cls._fields:
                 raise ValueError(f"{algo} does not support prox_solver='gd'")

@@ -1,5 +1,6 @@
 from repro.problems.quadratic import QuadraticProblem, make_synthetic_quadratic, make_ridge_problem
 from repro.problems.logistic import LogisticProblem, make_a9a_like_problem
+from repro.problems.fed_lm import FedLMProblem, make_fed_lm_problem
 from repro.problems.dp_erm import (
     DPLogisticProblem,
     DPQuadraticProblem,
@@ -12,6 +13,8 @@ from repro.problems.dp_erm import (
 )
 
 __all__ = [
+    "FedLMProblem",
+    "make_fed_lm_problem",
     "QuadraticProblem",
     "make_synthetic_quadratic",
     "make_ridge_problem",

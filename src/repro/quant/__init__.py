@@ -1,3 +1,15 @@
-from repro.quant.quant import quantize_params, dequantize_params, quantization_error
+from repro.quant.quant import (
+    dequantize_leaf,
+    dequantize_params,
+    quantization_error,
+    quantize_leaf,
+    quantize_params,
+)
 
-__all__ = ["quantize_params", "dequantize_params", "quantization_error"]
+__all__ = [
+    "dequantize_leaf",
+    "dequantize_params",
+    "quantization_error",
+    "quantize_leaf",
+    "quantize_params",
+]

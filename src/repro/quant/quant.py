@@ -32,10 +32,35 @@ def _quantize_matrix(w: jax.Array, reduce_axis: int) -> dict:
     `reduce_axis` (the contraction dim), so leading stack dims (layers,
     experts) keep independent per-channel scales and scan/vmap axes survive."""
     w32 = w.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(w32), axis=reduce_axis, keepdims=True)
+    # ``initial=0.0`` keeps the reduction defined for zero-size inputs
+    # (1-column matrices need no special case: a length-1 reduction is fine);
+    # the 1e-12 floor keeps the scale nonzero so all-zero channels quantize
+    # to exact zeros instead of 0/0 NaNs.
+    amax = jnp.max(jnp.abs(w32), axis=reduce_axis, keepdims=True, initial=0.0)
     s = jnp.maximum(amax, 1e-12) / 127.0
     q = jnp.clip(jnp.round(w32 / s), -127, 127).astype(jnp.int8)
     return {"q": q, "s": s.astype(jnp.float32)}
+
+
+def quantize_leaf(w: jax.Array, reduce_axis: int = -1) -> dict:
+    """Quantize ONE array leaf to a ``{"q", "s"}`` wire dict (checked).
+
+    The contract the comm-channel layer relies on: any float array with
+    ``ndim >= 1`` round-trips — including zero-size arrays and matrices with
+    a single row/column along ``reduce_axis`` — and malformed inputs fail
+    here with a clear error instead of deep inside a jit.
+    """
+    if not hasattr(w, "ndim") or not hasattr(w, "dtype"):
+        raise TypeError(
+            f"quantize_leaf expects an array leaf, got {type(w).__name__}"
+        )
+    if w.ndim < 1:
+        raise ValueError("quantize_leaf needs ndim >= 1 (a channel axis)")
+    if not jnp.issubdtype(w.dtype, jnp.floating):
+        raise TypeError(
+            f"quantize_leaf expects a float array, got dtype {w.dtype}"
+        )
+    return _quantize_matrix(w, reduce_axis=reduce_axis)
 
 
 def _is_weight_key(names: list[str]) -> bool:
@@ -54,10 +79,18 @@ def _path_names(path) -> list[str]:
 
 def quantize_params(params: PyTree) -> PyTree:
     """Quantize every large 2D+ weight leaf ('w' / 'emb'); returns a pytree
-    with {"q","s"} dicts in place of those leaves (others untouched)."""
+    with {"q","s"} dicts in place of those leaves.  Non-weight and small
+    leaves pass through BY DESIGN, but must still be arrays — a malformed
+    leaf (None, a stray dict, a python scalar) raises here, naming its path,
+    instead of surfacing as a shape error downstream."""
 
     def visit(path, leaf):
         names = _path_names(path)
+        if not hasattr(leaf, "ndim") or not hasattr(leaf, "dtype"):
+            raise TypeError(
+                f"quantize_params: leaf at {'/'.join(names) or '<root>'} is "
+                f"{type(leaf).__name__}, expected an array"
+            )
         if _is_weight_key(names) and leaf.ndim >= 2 and leaf.size >= _MIN_QUANT_SIZE:
             # embeddings (V, D): per-row scales -> reduce over D (last dim);
             # matmuls (..., d_in, d_out): per-output-column -> reduce over d_in
@@ -69,7 +102,18 @@ def quantize_params(params: PyTree) -> PyTree:
 
 
 def dequantize(leaf: dict, dtype=jnp.float32) -> jax.Array:
+    """Dequantize one ``{"q", "s"}`` wire dict (checked inverse of
+    `quantize_leaf` / `_quantize_matrix`)."""
+    if not isinstance(leaf, dict) or not {"q", "s"} <= set(leaf):
+        got = sorted(leaf) if isinstance(leaf, dict) else type(leaf).__name__
+        raise TypeError(
+            f"dequantize expects a {{'q', 's'}} dict from quantize_leaf, got {got}"
+        )
     return (leaf["q"].astype(jnp.float32) * leaf["s"]).astype(dtype)
+
+
+#: Leaf-level inverse under the name the comm-channel layer imports.
+dequantize_leaf = dequantize
 
 
 def dequantize_params(qparams: PyTree, dtype=jnp.float32) -> PyTree:

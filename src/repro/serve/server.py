@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.channel import wire_vector_bytes
 from repro.core.rounds import ROUND_DEFS, make_registry_ops
 from repro.experiments.spec import ALGOS, _REQUIRED
 from repro.serve.stats import ServeStats
@@ -134,6 +135,7 @@ class FedRoundServer:
         prox_tol: float = 1e-10,
         batch_clients: int | None = None,
         local_steps: int | None = None,
+        channel: str | None = None,
     ) -> None:
         if algo not in ROUND_DEFS:
             raise ValueError(
@@ -171,6 +173,12 @@ class FedRoundServer:
             binding = {"local_steps": 4 if local_steps is None else local_steps}
         elif batch_clients is not None:
             binding["batch_clients"] = batch_clients
+        binding["channel"] = channel
+        # Static wire price of one d-vector under this channel: the per-round
+        # bytes ledger is comm x this (host int64 — see runner.ledger_bytes).
+        self._wire_bytes = wire_vector_bytes(
+            channel, int(np.prod(self._x0.shape)), self._x0.dtype.itemsize
+        )
 
         def _ops(mask):
             # Rebuilt inside the trace: same registry binding as the scan
@@ -221,7 +229,11 @@ class FedRoundServer:
             t0, d2, comm = in_flight.popleft()
             d2_host = float(d2)  # blocks until the round's result is ready
             now = time.perf_counter()
-            self.stats.record(now - t0, now - start, d2_host, int(comm))
+            comm_host = int(comm)
+            self.stats.record(
+                now - t0, now - start, d2_host, comm_host,
+                comm_bytes=comm_host * self._wire_bytes,
+            )
 
         for _ in range(num_rounds):
             mask = jnp.asarray(self._stream.tick())

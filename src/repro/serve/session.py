@@ -61,7 +61,7 @@ from repro.core.catalyst import catalyzed_step_def
 from repro.core.composite import composite_step_def
 from repro.core.rounds import ROUND_DEFS, client_sharded_step_def, registry_step_def
 from repro.core.types import StepDef
-from repro.experiments.runner import BatchResult
+from repro.experiments.runner import BatchResult, ledger_bytes
 from repro.experiments.spec import (
     RunSpec,
     _device_hparams,
@@ -72,8 +72,11 @@ from repro.experiments.spec import (
 
 # Static-config keys that parameterize the registry round binding (subset
 # present per algo: prox trio for the registry-prox algos, cohort size for
-# minibatch, local-loop length for deep_svrp).
-_REGISTRY_BINDING = ("prox_solver", "prox_steps", "prox_tol", "batch_clients", "local_steps")
+# minibatch, local-loop length for deep_svrp, comm channel for all of them).
+_REGISTRY_BINDING = (
+    "prox_solver", "prox_steps", "prox_tol", "batch_clients", "local_steps",
+    "channel",
+)
 
 # Buffer donation is not implemented on the CPU backend (jax warns and
 # ignores it); only request it where it is real.
@@ -100,7 +103,7 @@ def trial_step_def(algo: str, problem, x0, x_star, hp, cfg: Mapping[str, Any]) -
             problem, x0, x_star, hp,
             num_outer=cfg["num_outer"], inner_steps=cfg["inner_steps"],
             prox_solver=cfg["prox_solver"], prox_steps=cfg["prox_steps"],
-            prox_tol=cfg["prox_tol"],
+            prox_tol=cfg["prox_tol"], channel=cfg.get("channel"),
         )
     if algo == "sgd":
         return sgd_step_def(problem, x0, x_star, hp)
@@ -522,6 +525,12 @@ class FedSession:
             return jnp.zeros((self._B, 0), dtype=jnp.int32)
         return jnp.concatenate(self._comm, axis=1)
 
+    @property
+    def comm_bytes(self) -> np.ndarray:
+        """(B, t) cumulative wire-bytes ledger (host int64; see
+        `experiments.runner.ledger_bytes`)."""
+        return ledger_bytes(self._cfg, self._x0, self.comm)
+
     def _chunk_call(self, state, keys_bn):
         """One batch-of-trials chunk on the session's device substrate
         (batched: plain jit; clients: shard_mapped over the padded problem)."""
@@ -624,6 +633,7 @@ class FedSession:
             hparams=self._hparams,
             seeds=self._seeds,
             stopped_round=stopped_round,
+            comm_bytes=self.comm_bytes,
         )
 
 

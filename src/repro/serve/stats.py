@@ -20,14 +20,18 @@ class ServeStats:
         self.elapsed_s: list[float] = []  # run start -> result, per round
         self.dist_sq: list[float] = []  # server dist-to-opt after the round
         self.comm: list[int] = []  # cumulative communication steps
+        self.comm_bytes: list[int] = []  # cumulative wire bytes (when priced)
 
     def record(
-        self, latency_s: float, elapsed_s: float, dist_sq: float, comm: int
+        self, latency_s: float, elapsed_s: float, dist_sq: float, comm: int,
+        comm_bytes: int | None = None,
     ) -> None:
         self.latencies_s.append(float(latency_s))
         self.elapsed_s.append(float(elapsed_s))
         self.dist_sq.append(float(dist_sq))
         self.comm.append(int(comm))
+        if comm_bytes is not None:
+            self.comm_bytes.append(int(comm_bytes))
 
     @property
     def rounds(self) -> int:
@@ -55,6 +59,8 @@ class ServeStats:
             out["rounds_per_sec"] = float("nan")
             out["final_dist_sq"] = float("nan")
             out["total_comm"] = 0
+        if self.comm_bytes:
+            out["total_comm_bytes"] = self.comm_bytes[-1]
         return out
 
     def trace(self) -> np.ndarray:

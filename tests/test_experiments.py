@@ -121,7 +121,7 @@ def test_run_batch_compiles_once(prob, theory):
         "svrp",
         tuple(sorted({
             "num_steps": 50, "prox_solver": "exact", "prox_steps": 50,
-            "prox_tol": 1e-10,
+            "prox_tol": 1e-10, "channel": None,
         }.items())),
     )
     cache_size = getattr(jitted, "_cache_size", lambda: None)()

@@ -413,6 +413,102 @@ def test_dp_noise_draws_identical_across_substrates(dp_logistic_prob, dp_cases):
                                np.asarray(seq_dp.x_final), rtol=1e-5, atol=1e-12)
 
 
+# --------------------------------------------------------------- comm channels
+# Channel case table: every channel-capable ALGOS entry must (a) reproduce its
+# pre-channel trajectory BIT-EXACTLY under channel="identity", and (b) carry
+# an integer-exact bytes ledger — comm x the channel's static wire price —
+# that agrees across all four substrates for the lossy channels too.
+
+CHANNELED = ("sppm", "svrp", "svrp_minibatch", "catalyzed_svrp", "deep_svrp")
+
+
+def _bytes_check(res, channel):
+    """comm_bytes is int64 and exactly comm x wire_vector_bytes."""
+    from repro.core.channel import wire_vector_bytes
+
+    x = np.asarray(res.x_final)
+    wire = wire_vector_bytes(channel, x.shape[-1], x.dtype.itemsize)
+    cb = np.asarray(res.comm_bytes)
+    assert cb.dtype == np.int64
+    np.testing.assert_array_equal(cb, np.asarray(res.comm, dtype=np.int64) * wire)
+
+
+def test_channel_capability_set():
+    """A new channel-capable ALGOS entry must be wired into this table."""
+    assert {n for n, s in ALGOS.items() if "channel" in s.static} == set(CHANNELED)
+
+
+@pytest.mark.parametrize("algo", sorted(CHANNELED))
+def test_identity_channel_bit_exact(algo, prob, cases):
+    """channel="identity" IS the refactor's no-op: dist_sq, iterates, and
+    comm counts are bit-for-bit the default run's, and both runs price the
+    wire identically (full-precision bytes)."""
+    kw, _ = cases[algo]
+    base = run_batch(algo, prob, **kw)
+    ident = run_batch(algo, prob, channel="identity", **kw)
+    np.testing.assert_array_equal(np.asarray(base.dist_sq), np.asarray(ident.dist_sq))
+    np.testing.assert_array_equal(np.asarray(base.x_final), np.asarray(ident.x_final))
+    np.testing.assert_array_equal(np.asarray(base.comm), np.asarray(ident.comm))
+    np.testing.assert_array_equal(
+        np.asarray(base.comm_bytes), np.asarray(ident.comm_bytes)
+    )
+    _bytes_check(base, None)
+    _bytes_check(ident, "identity")
+
+
+@pytest.mark.parametrize("channel", ["quant8", "cast"])
+@pytest.mark.parametrize("algo", sorted(CHANNELED))
+def test_channel_equivalence_across_substrates(algo, channel, prob, cases):
+    """Lossy channels keep the substrate contract: sequential == vmapped ==
+    shard='data' == shard='clients' to the usual tolerance, with the bytes
+    ledger INTEGER-exact across all four."""
+    kw, _ = cases[algo]
+    kw = dict(kw, channel=channel)
+    seq = run_sequential(algo, prob, **kw)
+    _bytes_check(seq, channel)
+    for variant in (
+        run_batch(algo, prob, **kw),
+        run_batch(algo, prob, shard="data", **kw),
+        run_batch(algo, prob, shard="clients", **kw),
+    ):
+        _check(seq, variant)
+        np.testing.assert_array_equal(
+            np.asarray(seq.comm_bytes), np.asarray(variant.comm_bytes)
+        )
+
+
+@pytest.mark.parametrize("case", ["svrp-dp_quadratic", "sppm-dp_logistic"])
+def test_dp_channel_bytes_and_unshifted_draws(case, dp_cases):
+    """Channels are deterministic and consume no PRNG keys, so switching to
+    quant8 on a DP problem leaves the sampling stream untouched — the comm
+    trajectory (refresh events included) is integer-identical to the default
+    run's — and the DP substrate agreement holds ledger-exactly."""
+    prob, kw, _ = dp_cases[case]
+    algo = case.split("-")[0]
+    base = run_batch(algo, prob, **kw)
+    q = run_batch(algo, prob, channel="quant8", **kw)
+    np.testing.assert_array_equal(np.asarray(base.comm), np.asarray(q.comm))
+    seq = run_sequential(algo, prob, channel="quant8", **kw)
+    _check(seq, q)
+    np.testing.assert_array_equal(
+        np.asarray(seq.comm_bytes), np.asarray(q.comm_bytes)
+    )
+    _bytes_check(q, "quant8")
+
+
+def test_channel_rejected_for_unchanneled_algo(prob):
+    """Algorithms without a channel seam reject the key at resolve time."""
+    with pytest.raises(ValueError, match="channel"):
+        run_batch("sgd", prob, grid={"stepsize": 1e-3}, num_steps=5,
+                  channel="identity")
+
+
+def test_unknown_channel_rejected_early(prob):
+    with pytest.raises(ValueError, match="unknown comm channel"):
+        run_batch("svrp", prob, grid={"eta": 0.1, "p": 0.2}, num_steps=5,
+                  channel="zip9")
+
+
 # ------------------------------------------------------------- error paths
 def test_interpret_without_fused_rejected(prob):
     with pytest.raises(ValueError, match="interpret"):
