@@ -57,6 +57,12 @@ GATED = (
     # ratio (bigger is better, like every other gated ratio); the baseline
     # carries the acceptance line as an absolute floor of 3.704x (= 1/0.27).
     "deep_svrp_quant8_bytes_saving",
+    # Multi-tenant session pool: 8 tenants through ONE SessionPool dispatch
+    # per tick vs the same 8 sessions stepped round-robin (8 dispatches per
+    # tick).  Also carries an absolute >= 2.0x floor in the baseline (the
+    # acceptance line: pooling must at least halve the serving cost of 8
+    # concurrent sessions).
+    "pool_vs_roundrobin_8",
 )
 # NOT gated: minibatch_fused_vs_loop (interpret-mode Pallas on CPU is an
 # emulation, not the compiled kernel; recorded for the trajectory only) and

@@ -64,6 +64,16 @@ fused scan, recorded as `session_step_vs_scan`.  Acceptance: >= 0.7x absolute
 at most 30% of the scan's throughput, so early stopping and online serving
 never mean abandoning the engine's speed.
 
+Multi-tenant pool curve (`pool_scale` in the JSON, docs/SCALING.md): many
+concurrent SPPM federations served at tick granularity (one round per tick —
+the serving regime, where per-dispatch overhead, not FLOPs, is the cost),
+aggregate rounds/sec for P in {1, 4, 8, 16} tenants through ONE `SessionPool`
+dispatch per tick vs the same sessions stepped round-robin (P dispatches per
+tick).  The gated ratio `pool_vs_roundrobin_8` = round-robin wall-clock /
+pooled wall-clock at 8 tenants, with an absolute floor of 2.0x in the
+baseline (the acceptance line: pooling must at least halve the serving cost
+of 8 concurrent sessions).
+
 Client-scale stress curve (`client_scale` in the JSON, docs/SCALING.md): SVRP
 at its theory hyperparameters (eta = mu/(2 delta^2), p = 1/M) through
 `run_batch(shard="clients")` for M in {64, 256, 1024, 3000}, recorded as
@@ -115,7 +125,7 @@ from repro.core import theorem2_stepsize
 from repro.core.prox import PROX_SOLVERS, ProxSolver
 from repro.experiments import run_batch, run_sequential
 from repro.problems import make_a9a_like_problem, make_synthetic_quadratic
-from repro.serve import open_session
+from repro.serve import SessionPool, open_session
 
 
 def _register_legacy_newton() -> None:
@@ -212,6 +222,100 @@ def _logistic_variants(quick: bool):
             "svrp", lp, grid=sgrid, prox_solver="newton-cg", **common
         ).dist_sq,
     }
+
+
+def _pool_scale(quick: bool) -> tuple[dict, dict]:
+    """The multi-tenant serving section: aggregate rounds/sec vs pooled
+    tenant count, plus the gated `pool_vs_roundrobin_8` ratio — 8 tenants
+    through `SessionPool` (ONE jitted dispatch per tick) vs the same 8
+    sessions stepped round-robin (8 dispatches per tick).  Tick = 1 round:
+    the serving granularity the pool exists for.  Setup (session open, key
+    materialization, admission) is excluded from the timed region on BOTH
+    sides — the ratio prices steady-state serving, not tenancy churn.  The
+    prox is the prep-free gd solver: a per-chunk prepare (spectral's eigh)
+    re-runs EVERY tick at tick=1 on both sides and would swamp the dispatch
+    cost the section exists to measure."""
+    M, dim = 32, 16
+    n_seeds = 2
+    num_steps = 60 if quick else 200
+    tenants = (1, 4, 8, 16)
+    probs = [
+        make_synthetic_quadratic(num_clients=M, dim=dim, mu=1.0, L=400.0,
+                                 delta=6.0, seed=i)
+        for i in range(max(tenants))
+    ]
+    # Distinct per-tenant hyperparameters: the pool's contract is shared
+    # SHAPES, independent problems/hp/seeds — the bench exercises that.
+    grids = [
+        {"eta": 0.05 / (1.0 + 0.1 * i), "smoothness": float(p.smoothness_max())}
+        for i, p in enumerate(probs)
+    ]
+    kw = dict(seeds=n_seeds, num_steps=num_steps,
+              prox_solver="gd", prox_steps=20)
+
+    def timed_fresh(setup, run, reps: int = 3):
+        """(cold_s, warm_s) with a FRESH object per call (stepping consumes
+        the horizon); only `run` is inside the timed region."""
+        obj = setup()
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(obj))
+        cold = time.perf_counter() - t0
+        warm = []
+        for _ in range(reps):
+            obj = setup()
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(obj))
+            warm.append(time.perf_counter() - t0)
+        return cold, min(warm)
+
+    curve = {}
+    pool_warm = {}
+    for P in tenants:
+        def setup_pool(P=P):
+            pool = SessionPool(capacity=P)
+            for i in range(P):
+                pool.admit("sppm", probs[i], grid=grids[i], **kw)
+            return pool
+
+        def run_pool(pool):
+            d2 = None
+            for _ in range(num_steps):
+                d2, _ = pool.step(1)
+            return d2
+
+        cold, warm = timed_fresh(setup_pool, run_pool)
+        pool_warm[P] = warm
+        curve[str(P)] = {
+            "cold_s": cold,
+            "warm_us": warm * 1e6,
+            "aggregate_rounds_per_s": P * num_steps / warm,
+        }
+
+    def setup_rr():
+        return [
+            open_session("sppm", probs[i], grid=grids[i], **kw)
+            for i in range(8)
+        ]
+
+    def run_rr(sessions):
+        outs = None
+        for _ in range(num_steps):
+            outs = [s.step(1)[0] for s in sessions]
+        return outs
+
+    rr_cold, rr_warm = timed_fresh(setup_rr, run_rr)
+    record = {
+        "algo": "sppm", "M": M, "dim": dim, "seeds": n_seeds,
+        "num_steps": num_steps, "tick": 1,
+        "aggregate_rounds_per_s_vs_tenants": curve,
+        "roundrobin_8": {
+            "cold_s": rr_cold,
+            "warm_us": rr_warm * 1e6,
+            "aggregate_rounds_per_s": 8 * num_steps / rr_warm,
+        },
+    }
+    ratios = {"pool_vs_roundrobin_8": rr_warm / pool_warm[8]}
+    return record, ratios
 
 
 def _client_scale(quick: bool) -> tuple[dict, dict]:
@@ -462,6 +566,8 @@ def run_structured(quick: bool = False, fed_lm: bool = False) -> dict:
         speedups["shard_spectral_vs_batch_spectral"] = (
             warm_us["batch/spectral"] / warm_us["shard/spectral"]
         )
+    pool_scale, pool_ratios = _pool_scale(quick)
+    speedups.update(pool_ratios)
     client_scale, client_ratios = _client_scale(quick)
     speedups.update(client_ratios)
     comm_bytes, byte_ratios = _comm_bytes_section()
@@ -476,6 +582,7 @@ def run_structured(quick: bool = False, fed_lm: bool = False) -> dict:
         "timings_us": warm_us,
         "cold_compile_s": cold_s,
         "speedups": speedups,
+        "pool_scale": pool_scale,
         "client_scale": client_scale,
         "comm_bytes": comm_bytes,
     }
@@ -535,6 +642,17 @@ def _rows_from(data: dict) -> list:
             fl["total_bytes_quant8"],
             f"loss={fl['loss_quant8'][0]:.3f}->{fl['loss_quant8'][-1]:.3f};"
             f"bytes_ratio={fl['bytes_ratio']:.4f}",
+        ))
+    ps = data.get("pool_scale")
+    if ps:
+        pcurve = ps["aggregate_rounds_per_s_vs_tenants"]
+        rows.append((
+            "pool_scale_rounds_per_s",
+            pcurve["8"]["warm_us"],
+            ";".join(
+                f"P{p}={v['aggregate_rounds_per_s']:.1f}/s"
+                for p, v in pcurve.items()
+            ) + f";pool_vs_roundrobin_8={sp['pool_vs_roundrobin_8']:.2f}x",
         ))
     cs = data.get("client_scale")
     if cs:

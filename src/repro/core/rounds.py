@@ -627,6 +627,41 @@ def registry_batched_scan(
     return scan_rounds(ROUND_DEFS[algo], ops, x0, keys, num_steps)
 
 
+def registry_pool_scan(
+    algo: str, problems, x0, x_star, hp, state, keys, *,
+    num_trials: int, **binding,
+):
+    """Pool-axis binding: the batched registry scan lifted over a leading
+    TENANT axis — many same-shaped federations stepped by one dispatch.
+
+    Every argument carries a leading ``(P,)`` pool axis (`problems` is the
+    stacked problem pytree, `hp` the stacked per-trial hparams, `state` the
+    stacked ``(P, B, ...)`` round state, `keys` ``(P, n, B)``); the per-tenant
+    body is EXACTLY `registry_step_def`'s round scanned `n` steps, so a pooled
+    lane replays its standalone session bit-for-bit in expectation and within
+    vmap-reassociation tolerance in floats (held at <= 1e-5 with integer-exact
+    comm by tests/test_pool.py).  The StepDef — including the prox solver's
+    `prepare` (e.g. the spectral eigendecomposition, which vmap batches over
+    tenants) — is constructed inside the vmap but OUTSIDE the scan, so
+    per-binding setup happens once per chunk, never per round.
+
+    One substrate-level caveat: vmap linearizes the batch-aware anchor-refresh
+    `lax.cond(jnp.any(c))` into a select, so a pooled chunk pays the full
+    gradient recompute every round (the always-pay form the gate replaces —
+    numerically bitwise-identical, see docs/ARCHITECTURE.md).
+    """
+    rdef = ROUND_DEFS[algo]
+
+    def one(problem, x0_t, x_star_t, hp_t, s, keys_nb):
+        ops = make_registry_ops(
+            algo, problem, x0_t, x_star_t, hp_t,
+            batched=True, num_trials=num_trials, **binding,
+        )
+        return jax.lax.scan(lambda st, k: rdef.round(ops, st, k), s, keys_nb)
+
+    return jax.vmap(one)(problems, x0, x_star, hp, state, keys)
+
+
 # ------------------------------------------------- pod (pytree) local solver
 def local_prox_gd_tree(
     grad_fn: Callable,

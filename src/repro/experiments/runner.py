@@ -89,7 +89,9 @@ from repro.experiments.spec import (  # noqa: F401  (re-exported API)
     _device_hparams,
     _keys_for,
     as_runspec,
+    check_pool_entry,
     check_substrate,
+    pool_entry_signature,
     resolve_algo,
 )
 from repro.utils.shard import shard_map_compat

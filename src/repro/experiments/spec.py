@@ -202,6 +202,76 @@ def horizon_rounds(cfg: Mapping[str, Any]) -> int:
     return int(cfg["num_steps"] if "num_steps" in cfg else cfg["num_rounds"])
 
 
+# ------------------------------------------------------------ pool signatures
+# Static-config keys that ONLY set the round horizon (the key-schedule length)
+# and never shape the round body itself — pool tenants may differ on these
+# (independent horizons are part of the SessionPool contract).  Catalyst's
+# num_outer/inner_steps are deliberately NOT here: its step body carries the
+# stage structure, so catalyzed tenants must share the nesting.
+_POOL_HORIZON_KEYS = frozenset({"num_steps", "num_rounds"})
+
+
+def _leaf_signature(tree) -> tuple:
+    return tuple(
+        (tuple(jnp.shape(leaf)), str(jnp.result_type(leaf)))
+        for leaf in jax.tree.leaves(tree)
+    )
+
+
+def pool_entry_signature(
+    algo: str, cfg: Mapping[str, Any], num_trials: int, problem, x0, x_star
+) -> tuple:
+    """The static signature every tenant packed into one `SessionPool` lane
+    set must share: algorithm, round-body static config (horizon-only keys
+    excluded), trial count, and the problem/x0/x_star pytree shapes+dtypes.
+
+    Anything in this tuple parameterizes the ONE jitted pool chunk — a
+    mismatch would mean a second compilation, i.e. a second dispatch per
+    tick, which is exactly what the pool exists to avoid.  Hyperparameters,
+    seeds, horizons and `stop_eps` are deliberately ABSENT: those are data
+    (or key-schedule length) and vary freely per tenant.  Computed here, in
+    the same module as `RunSpec.resolve`, so the pool's admission validation
+    can never drift from the entry points' resolution path.
+    """
+    static = tuple(
+        (k, v) for k, v in sorted(cfg.items()) if k not in _POOL_HORIZON_KEYS
+    )
+    return (
+        algo,
+        static,
+        int(num_trials),
+        str(jax.tree.structure(problem)),
+        _leaf_signature(problem),
+        _leaf_signature(x0),
+        _leaf_signature(x_star),
+    )
+
+
+_POOL_SIG_FIELDS = (
+    "algo", "static config (horizon keys excluded)", "trial count",
+    "problem structure", "problem leaf shapes/dtypes",
+    "x0 shape/dtype", "x_star shape/dtype",
+)
+
+
+def check_pool_entry(expected: tuple, got: tuple) -> None:
+    """Raise a field-by-field mismatch error if `got` cannot share the pool's
+    jitted chunk with `expected` (the signature fixed by the first admit)."""
+    if expected == got:
+        return
+    diffs = [
+        f"  {name}: pool has {a!r}, tenant has {b!r}"
+        for name, a, b in zip(_POOL_SIG_FIELDS, expected, got)
+        if a != b
+    ]
+    raise ValueError(
+        "tenant is not poolable with the sessions already admitted — every "
+        "tenant shares ONE jitted chunk, so algo, round-body static config "
+        "and shapes must match (hyperparameters, seeds and horizons may "
+        "differ):\n" + "\n".join(diffs)
+    )
+
+
 # ------------------------------------------------------------------- RunSpec
 class ResolvedRun(NamedTuple):
     """A `RunSpec` bound to a problem: everything the substrates consume."""

@@ -1,0 +1,29 @@
+"""Buffer-donation gating for the serve layer's jitted dispatches.
+
+Every serve-layer entry point keeps state device-resident between dispatches
+and wants the previous state's buffers donated back to the next chunk — but
+buffer donation is not implemented on the CPU backend (jax warns and ignores
+the request), so donation must be requested only where it is real.  Session,
+server and pool all gate through this ONE helper so the policy can never
+drift between them (it used to be written twice: a module-level constant in
+`serve/session.py` and an inline conditional in `serve/server.py`).
+"""
+from __future__ import annotations
+
+# Backends where jit's donate_argnums is actually honored.  CPU is the one
+# backend that ignores donation today; an unknown/new backend is assumed to
+# support it (the worst case is jax's own "donation not implemented" warning,
+# never wrong results).
+_NO_DONATION_BACKENDS = frozenset({"cpu"})
+
+
+def donate_argnums_for(backend: str, *positions: int) -> tuple[int, ...]:
+    """The `donate_argnums` tuple for a state-carrying chunk dispatch.
+
+    `positions` are the argument indices holding donatable device state;
+    the result is `()` on backends that ignore donation (CPU), and
+    `positions` unchanged everywhere else.
+    """
+    if backend in _NO_DONATION_BACKENDS:
+        return ()
+    return tuple(positions)

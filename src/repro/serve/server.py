@@ -34,7 +34,6 @@ requests; this server serves optimization ROUNDS.
 from __future__ import annotations
 
 import time
-from collections import deque
 from typing import Any, Mapping
 
 import jax
@@ -44,7 +43,8 @@ import numpy as np
 from repro.core.channel import wire_vector_bytes
 from repro.core.rounds import ROUND_DEFS, make_registry_ops
 from repro.experiments.spec import ALGOS, _REQUIRED
-from repro.serve.stats import ServeStats
+from repro.serve.donation import donate_argnums_for
+from repro.serve.stats import PipelinedReadback, ServeStats
 
 
 class ClientStream:
@@ -117,13 +117,21 @@ class FedRoundServer:
     server state device-resident, pipelines round dispatch against stats
     readback, and returns the accumulated `ServeStats`.  Repeated `run` calls
     continue the same trajectory (round indices keep counting, so the
-    `fold_in` key sequence never repeats)."""
+    `fold_in` key sequence never repeats).
+
+    Pool mode — `FedRoundServer(pool=SessionPool(...))` — serves MANY
+    tenants' sessions instead of one churning stream: each served round is
+    one pooled tick (`pool.step(1)`, a single dispatch advancing every
+    running tenant), with the identical `pipeline_depth`-deep stats readback;
+    tenants whose horizon runs out are frozen (masked from the chunk) rather
+    than erroring, and `run` stops early once no tenant is left running."""
 
     def __init__(
         self,
-        algo: str,
-        problem,
+        algo: str | None = None,
+        problem=None,
         *,
+        pool=None,
         hparams: Mapping[str, float] | None = None,
         stream: ClientStream | None = None,
         x0: jax.Array | None = None,
@@ -137,6 +145,20 @@ class FedRoundServer:
         local_steps: int | None = None,
         channel: str | None = None,
     ) -> None:
+        if pool is not None:
+            if algo is not None or problem is not None:
+                raise ValueError(
+                    "FedRoundServer(pool=...) serves the pool's tenants; "
+                    "don't also pass algo/problem (admit tenants to the pool)"
+                )
+            if pipeline_depth < 1:
+                raise ValueError("pipeline_depth must be >= 1")
+            self._pool = pool
+            self._depth = pipeline_depth
+            self._round_idx = 0
+            self.stats = ServeStats()
+            return
+        self._pool = None
         if algo not in ROUND_DEFS:
             raise ValueError(
                 f"FedRoundServer serves rounds-defined algorithms "
@@ -201,8 +223,9 @@ class FedRoundServer:
         def _round(state, key, mask):
             return self._rdef.round(_ops(mask), state, key)
 
-        donate = () if jax.default_backend() == "cpu" else (0,)
-        self._round_fn = jax.jit(_round, donate_argnums=donate)
+        self._round_fn = jax.jit(
+            _round, donate_argnums=donate_argnums_for(jax.default_backend(), 0)
+        )
         # Init is sampling-free (anchor setup / comm0), so a full mask is fine.
         self._state = self._rdef.init(_ops(jnp.ones(M, dtype=bool)), self._x0)
         self._base_key = jax.random.key(seed)
@@ -221,12 +244,13 @@ class FedRoundServer:
 
     def run(self, num_rounds: int) -> ServeStats:
         """Run `num_rounds` continuous rounds; cohorts re-form from the stream
-        every round; stats readback is pipelined `pipeline_depth` deep."""
+        every round (stream mode) or every running tenant advances one pooled
+        round (pool mode); stats readback is pipelined `pipeline_depth` deep."""
+        if self._pool is not None:
+            return self._run_pool(num_rounds)
         start = time.perf_counter()
-        in_flight: deque[tuple[float, Any, Any]] = deque()
 
-        def drain() -> None:
-            t0, d2, comm = in_flight.popleft()
+        def drain_one(t0: float, d2: Any, comm: Any) -> None:
             d2_host = float(d2)  # blocks until the round's result is ready
             now = time.perf_counter()
             comm_host = int(comm)
@@ -235,15 +259,62 @@ class FedRoundServer:
                 comm_bytes=comm_host * self._wire_bytes,
             )
 
+        readback = PipelinedReadback(self._depth, drain_one)
         for _ in range(num_rounds):
             mask = jnp.asarray(self._stream.tick())
             key_t = jax.random.fold_in(self._base_key, self._round_idx)
             t0 = time.perf_counter()
             self._state, (d2, comm) = self._round_fn(self._state, key_t, mask)
             self._round_idx += 1
-            in_flight.append((t0, d2, comm))
-            while len(in_flight) >= self._depth:
-                drain()
-        while in_flight:
-            drain()
+            readback.push(t0, d2, comm)
+        readback.flush()
+        return self.stats
+
+    def _run_pool(self, num_rounds: int) -> ServeStats:
+        """Pool mode: one pooled tick per served round, aggregate stats.
+
+        The recorded dist^2 is the mean over running lanes' trials after the
+        tick; comm/comm_bytes are the cumulative steps SERVED across runs —
+        each tick attributes only its own per-lane increments, so the total
+        stays monotone when a converged/exhausted tenant's lane freezes (its
+        masked chunk outputs drop to zero, but its served rounds are kept)."""
+        pool = self._pool
+        start = time.perf_counter()
+        # Per-lane cumulative comm already attributed, seeded from the rounds
+        # tenants ran before this call (no chunk is in flight yet, so the
+        # host conversion here cannot stall the pipeline).
+        base = np.zeros((pool.capacity,), dtype=np.int64)
+        for tid in pool.tenant_ids(resident_only=True):
+            ses = pool.session(tid)
+            if ses.t:
+                base[pool._tenants[tid].slot] = int(
+                    np.asarray(ses.comm[:, -1]).sum()
+                )
+        served = getattr(self, "_comm_served", 0)
+
+        def drain_one(t0: float, active: np.ndarray, d2: Any, comm: Any) -> None:
+            nonlocal served
+            d2_host = np.asarray(d2)  # blocks until the tick's result is ready
+            now = time.perf_counter()
+            comm_host = np.asarray(comm)  # (P, B, 1) cumulative, masked lanes 0
+            mean_d2 = float(d2_host[active, :, -1].mean())
+            lane_totals = comm_host[:, :, -1].sum(axis=1).astype(np.int64)
+            served += int((lane_totals - base)[active].sum())
+            base[active] = lane_totals[active]
+            self.stats.record(
+                now - t0, now - start, mean_d2, served,
+                comm_bytes=served * pool.wire_bytes_per_vector,
+            )
+
+        readback = PipelinedReadback(self._depth, drain_one)
+        for _ in range(num_rounds):
+            if pool.freeze_exhausted(1) == 0:
+                break  # every tenant converged, evicted, or out of horizon
+            active = pool.active_mask
+            t0 = time.perf_counter()
+            d2, comm = pool.step(1)
+            self._round_idx += 1
+            readback.push(t0, active, d2, comm)
+        readback.flush()
+        self._comm_served = served
         return self.stats

@@ -62,6 +62,7 @@ from repro.core.composite import composite_step_def
 from repro.core.rounds import ROUND_DEFS, client_sharded_step_def, registry_step_def
 from repro.core.types import StepDef
 from repro.experiments.runner import BatchResult, ledger_bytes
+from repro.serve.donation import donate_argnums_for
 from repro.experiments.spec import (
     RunSpec,
     _device_hparams,
@@ -78,12 +79,13 @@ _REGISTRY_BINDING = (
     "channel",
 )
 
-# Buffer donation is not implemented on the CPU backend (jax warns and
-# ignores it); only request it where it is real.
-_DONATE_STATE: tuple[int, ...] = () if jax.default_backend() == "cpu" else (4,)
+# The chunk fns' state argument positions, gated through the ONE serve-level
+# donation policy (serve/donation.py — CPU ignores donation, so it is only
+# requested where it is real).
+_DONATE_STATE = donate_argnums_for(jax.default_backend(), 4)
 # The client-sharded chunk has two extra leading args (padded problem, valid
 # mask), so its state sits at a different position.
-_DONATE_STATE_CLIENTS: tuple[int, ...] = () if jax.default_backend() == "cpu" else (5,)
+_DONATE_STATE_CLIENTS = donate_argnums_for(jax.default_backend(), 5)
 
 # Post-round state dtype signatures, keyed on the full config+shape signature
 # (see FedSession._canonicalize).
@@ -172,8 +174,17 @@ def _seq_chunk_fn(algo: str, static_items: tuple):
     return jax.jit(chunk, donate_argnums=_DONATE_STATE)
 
 
-@functools.lru_cache(maxsize=None)
-def _batched_chunk_fn(algo: str, static_items: tuple):
+def batched_scan_body(algo: str, static_items: tuple):
+    """The batched substrate's n-round scan body, shared by the single-session
+    chunk (`_batched_chunk_fn`) and the pool-axis binding
+    (`core.rounds.registry_pool_scan` / `repro.serve.pool.SessionPool`):
+
+        scan_chunk(problem, x0, x_star, hp, state, keys) -> (state, (d2, comm))
+
+    with `keys` in the registry scan's `(n, B)` layout and outputs `(n, B)`.
+    The StepDef is constructed INSIDE the caller's trace but OUTSIDE the scan,
+    so per-binding setup (e.g. `solver.prepare`'s eigendecomposition) is
+    hoisted once per chunk, never per round."""
     cfg = dict(static_items)
     if algo in ROUND_DEFS:
         binding = {k: cfg[k] for k in _REGISTRY_BINDING if k in cfg}
@@ -195,6 +206,13 @@ def _batched_chunk_fn(algo: str, static_items: tuple):
 
             vstep = jax.vmap(one)
             return jax.lax.scan(lambda s, krow: vstep(hp, s, krow), state, keys)
+
+    return scan_chunk
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_chunk_fn(algo: str, static_items: tuple):
+    scan_chunk = batched_scan_body(algo, static_items)
 
     def chunk(problem, x0, x_star, hp, state, keys_bn):
         # Keys arrive (B, n) (the session's storage layout) and outputs leave

@@ -9,7 +9,43 @@ an online setting.
 """
 from __future__ import annotations
 
+from collections import deque
+from typing import Any, Callable
+
 import numpy as np
+
+
+class PipelinedReadback:
+    """Depth-bounded in-flight results: overlap device rounds with host stats.
+
+    The serving loops (`FedRoundServer.run`, both stream and pool mode) never
+    block on a round's scalar stats before dispatching the next round — they
+    `push` the lazy device values and this helper drains (i.e. calls the
+    blocking `drain_one`) only once `depth` results are in flight, so jax's
+    async dispatch keeps up to `depth` rounds buffered between the device and
+    the host readback.  On the synchronous CPU backend the overlap is limited
+    but the structure (and the stats it records) is identical.
+    """
+
+    def __init__(self, depth: int, drain_one: Callable[..., None]) -> None:
+        if depth < 1:
+            raise ValueError("pipeline depth must be >= 1")
+        self._depth = depth
+        self._drain_one = drain_one
+        self._in_flight: deque[tuple[Any, ...]] = deque()
+
+    def push(self, *item: Any) -> None:
+        self._in_flight.append(item)
+        while len(self._in_flight) >= self._depth:
+            self._drain_one(*self._in_flight.popleft())
+
+    def flush(self) -> None:
+        """Drain everything still in flight (end of a `run`)."""
+        while self._in_flight:
+            self._drain_one(*self._in_flight.popleft())
+
+    def __len__(self) -> int:
+        return len(self._in_flight)
 
 
 class ServeStats:

@@ -68,3 +68,18 @@ def test_docs_cross_reference_each_other():
     readme = (REPO / "README.md").read_text()
     for page in ("ARCHITECTURE.md", "SCALING.md", "BENCHMARKS.md"):
         assert f"docs/{page}" in readme, f"README does not link docs/{page}"
+
+
+def test_pool_docs_sections_exist():
+    # The multi-tenant serving layer is documented where the README points:
+    # SCALING.md owns the section + measured curve, ARCHITECTURE.md carries
+    # the pooled substrate/guarantee rows.
+    scaling = (REPO / "docs" / "SCALING.md").read_text()
+    assert "## Multi-tenant serving: the session pool" in scaling
+    assert "pool_vs_roundrobin_8" in scaling
+    arch = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "SessionPool" in arch
+    assert "pooled lane ≡ standalone session" in arch
+    readme = (REPO / "README.md").read_text()
+    assert "SessionPool" in readme
+    assert "multi-tenant-serving-the-session-pool" in readme
