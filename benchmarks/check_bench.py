@@ -10,7 +10,12 @@ i.e. the PR destroyed >= 30% of the recorded batching win.
 
 A baseline may additionally carry an ``absolute_floors`` map: hard minimums a
 measured ratio must clear regardless of the relative floor (e.g. the logistic
-track's acceptance line "batch-vs-loop >= 5x on CPU").
+track's acceptance line "batch-vs-loop >= 5x on CPU").  Since the
+perf-accounting PR one of those floors is a ROOFLINE FRACTION rather than a
+speedup: ``quadratic_prox_roofline_frac`` — the XLA-compiled fused quadratic
+prox's achieved FLOP/s as a fraction of the measured-matmul CPU peak, which
+is same-host-calibrated and therefore portable across runner generations
+(docs/PERFORMANCE.md#absolute-floor).
 
 ``--trajectory PATH`` gates the same ratios against a second JSON (the
 checked-in last RECORDED measurement, repo-root BENCH_sweep.json) at
@@ -18,10 +23,12 @@ checked-in last RECORDED measurement, repo-root BENCH_sweep.json) at
 with its ~40% derate, so this gate is no stricter than the baseline one),
 replacing the second check_bench invocation CI used to run.
 
-``--step-summary [PATH]`` renders one markdown table — measured vs
-baseline-gate vs trajectory-floor, pass/fail per ratio — to PATH (default:
-the file named by $GITHUB_STEP_SUMMARY, i.e. the Actions job summary), so a
-regression is readable in the run page without downloading the JSON artifact.
+``--step-summary [PATH]`` renders the markdown tables — measured vs
+baseline-gate vs trajectory-floor pass/fail per ratio, plus the achieved-MFU
+table per timed section when the measured JSON carries a ``perf`` block — to
+PATH (default: the file named by $GITHUB_STEP_SUMMARY, i.e. the Actions job
+summary), so a regression is readable in the run page without downloading
+the JSON artifact.
 
 Exit code 0 = all gated ratios hold; 1 = regression; 2 = malformed input.
 """
@@ -172,6 +179,37 @@ def summary_table(
     return "\n".join(lines)
 
 
+def mfu_table(measured: dict) -> str:
+    """The per-section MFU markdown table for the Actions job summary.
+
+    One row per timed section of the measured JSON's ``perf`` block (section
+    names encode (algo, substrate, solver) — e.g. ``batch/spectral`` is the
+    batched quadratic SVRP sweep with the spectral prox): analytic FLOPs per
+    round, achieved GFLOP/s, and MFU against the recorded peak.  Absent on
+    JSONs that predate the perf-accounting layer (returns "").  The numbers'
+    meaning and caveats: docs/PERFORMANCE.md.
+    """
+    perf = measured.get("perf")
+    if not perf or not perf.get("sections"):
+        return ""
+    lines = [
+        "### Achieved MFU per timed section",
+        "",
+        f"peak = {perf['peak_gflops']:.1f} GFLOP/s ({perf['peak_source']})",
+        "",
+        "| section | FLOPs/round | GFLOP/s | MFU |",
+        "|---|---:|---:|---:|",
+    ]
+    for name in sorted(perf["sections"]):
+        s = perf["sections"][name]
+        lines.append(
+            f"| {name} | {s['flops_per_round']:.3e} "
+            f"| {s['gflops_per_s']:.3f} | {s['mfu']:.4f} |"
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("measured", help="JSON written by benchmarks.sweep_bench --json")
@@ -213,6 +251,9 @@ def main() -> None:
             measured, baseline, args.floor,
             trajectory=trajectory, traj_floor=args.trajectory_floor,
         )
+        mfu = mfu_table(measured)
+        if mfu:
+            md += "\n" + mfu
         path = args.step_summary or os.environ.get("GITHUB_STEP_SUMMARY", "")
         if path:
             with open(path, "a") as f:

@@ -101,13 +101,33 @@ loss trajectories (the engine's dist_sq column is the across-client mean LM
 loss) and the measured bytes ratio, recording that the quantized wire
 CONVERGES on the real-model path, not just that it is small.
 
+Perf accounting (`perf` in the JSON, docs/PERFORMANCE.md): every timed
+section is priced by the analytic FLOP model (`repro.core.flops.sweep_flops`
+— init + rounds x expected per-round cost + once-per-sweep hoisted prep) and
+reported as `flops_per_round`, achieved `gflops_per_s` (analytic FLOPs over
+the warm wall-clock) and `mfu` against `repro.utils.roofline.get_peak()` —
+the same-host CALIBRATED matmul peak on CPU.  The `pool_scale/P*` entries
+carry the pool tick's aggregate MFU (all tenants' FLOPs through one
+dispatch); `client_scale/M*` the sharded stress curve's.
+
+Prox roofline microbenchmark (`prox_roofline` in the JSON): the fused
+batched quadratic gd-prox (`prox_gd_batched`, B=64/d=128/T=32, analytic
+`T(2Bd^2 + 6Bd)` FLOPs) timed through XLA (`use_kernel=False`) and through
+interpret-mode Pallas.  The XLA fraction of peak is the gate's ABSOLUTE
+roofline floor (`quadratic_prox_roofline_frac` >= 0.2 in the baseline's
+`absolute_floors`, a 4x derate of the measured ~0.8 — it fails when the
+prox path stops being compute-shaped, not when the runner slows down, since
+the calibrated peak moves with the host).  The Pallas-interpret fraction
+prices the CPU emulation and is informational
+(docs/PERFORMANCE.md#honest-caveats).
+
 CLI (the CI bench job's entry point):
 
     python -m benchmarks.sweep_bench --json BENCH_sweep.json [--full] [--fed-lm]
 
-writes the timings + speedup ratios as machine-readable JSON, gated against
-the checked-in baseline AND the recorded repo-root trajectory by
-benchmarks/check_bench.py.
+writes the timings + speedup ratios + per-section perf block as
+machine-readable JSON, gated against the checked-in baseline AND the
+recorded repo-root trajectory by benchmarks/check_bench.py.
 """
 from __future__ import annotations
 
@@ -122,10 +142,12 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 
 from repro.core import theorem2_stepsize
+from repro.core.flops import sweep_flops
 from repro.core.prox import PROX_SOLVERS, ProxSolver
 from repro.experiments import run_batch, run_sequential
 from repro.problems import make_a9a_like_problem, make_synthetic_quadratic
 from repro.serve import SessionPool, open_session
+from repro.utils.roofline import get_peak
 
 
 def _register_legacy_newton() -> None:
@@ -172,9 +194,11 @@ def _timed(fn, warm_reps: int = 3):
     return cold, min(warm)
 
 
-def _logistic_variants(quick: bool):
+def _logistic_variants(quick: bool) -> tuple[dict, dict]:
     """The logistic (non-quadratic) sweep variants: SPPM on an a9a-like
-    problem, old fixed-25-Newton loop track vs the engine's batched solvers."""
+    problem, old fixed-25-Newton loop track vs the engine's batched solvers.
+    Returns (variants, analytic FLOPs per timed call — repro.core.flops,
+    guarded-Newton entries are iteration CEILINGS per docs/PERFORMANCE.md)."""
     _register_legacy_newton()
     M = 32
     num_steps = 400 if quick else 1000
@@ -196,7 +220,7 @@ def _logistic_variants(quick: bool):
     sgrid_gd = {**sgrid, "smoothness": L}
     gd_kw = dict(prox_solver="gd", prox_steps=25)
 
-    return {
+    variants = {
         "logistic_loop/fixed25": lambda: run_sequential(
             "sppm", lp, grid=grid, prox_solver="newton-fixed25", **common
         ).dist_sq,
@@ -222,9 +246,27 @@ def _logistic_variants(quick: bool):
             "svrp", lp, grid=sgrid, prox_solver="newton-cg", **common
         ).dist_sq,
     }
+    B = 4 * n_seeds  # every grid above is 4 etas x n_seeds trials
+    sppm = lambda **kw: sweep_flops(
+        "sppm", lp, num_rounds=num_steps, num_trials=B, **kw
+    )
+    svrp = lambda **kw: sweep_flops(
+        "svrp", lp, num_rounds=num_steps, num_trials=B, p=1.0 / M, **kw
+    )
+    flops = {
+        "logistic_loop/fixed25": sppm(prox_solver="newton-fixed25"),
+        "logistic_loop/exact": sppm(prox_solver="exact"),
+        "logistic_batch/newton": sppm(prox_solver="newton"),
+        "logistic_batch/newton-cg": sppm(prox_solver="newton-cg"),
+        "logistic_svrp_loop/gd": svrp(**gd_kw),
+        "logistic_svrp_batch/gd": svrp(**gd_kw),
+        "logistic_svrp_loop/newton-cg": svrp(prox_solver="newton-cg"),
+        "logistic_svrp_batch/newton-cg": svrp(prox_solver="newton-cg"),
+    }
+    return variants, flops
 
 
-def _pool_scale(quick: bool) -> tuple[dict, dict]:
+def _pool_scale(quick: bool, peak_flops: float) -> tuple[dict, dict]:
     """The multi-tenant serving section: aggregate rounds/sec vs pooled
     tenant count, plus the gated `pool_vs_roundrobin_8` ratio — 8 tenants
     through `SessionPool` (ONE jitted dispatch per tick) vs the same 8
@@ -285,10 +327,21 @@ def _pool_scale(quick: bool) -> tuple[dict, dict]:
 
         cold, warm = timed_fresh(setup_pool, run_pool)
         pool_warm[P] = warm
+        # Aggregate analytic FLOPs of one timed run: every tenant's whole
+        # sweep (repro.core.flops) — the pool-curve MFU of docs/PERFORMANCE.md
+        # (serving is dispatch-bound, so these fractions are tiny by design).
+        total_flops = sum(
+            sweep_flops("sppm", probs[i], num_rounds=num_steps,
+                        num_trials=n_seeds, prox_solver="gd", prox_steps=20)
+            for i in range(P)
+        )
         curve[str(P)] = {
             "cold_s": cold,
             "warm_us": warm * 1e6,
             "aggregate_rounds_per_s": P * num_steps / warm,
+            "flops_per_round": total_flops / num_steps,
+            "gflops_per_s": total_flops / warm / 1e9,
+            "mfu": total_flops / warm / peak_flops,
         }
 
     def setup_rr():
@@ -318,7 +371,7 @@ def _pool_scale(quick: bool) -> tuple[dict, dict]:
     return record, ratios
 
 
-def _client_scale(quick: bool) -> tuple[dict, dict]:
+def _client_scale(quick: bool, peak_flops: float) -> tuple[dict, dict]:
     """The shard='clients' stress section: (client_scale record, extra
     speedup ratios).  Rounds/sec at each M is measured warm (second call of
     the cached shard-mapped runner), so it prices the steady-state round
@@ -341,10 +394,19 @@ def _client_scale(quick: bool) -> tuple[dict, dict]:
             return run_batch("svrp", prob, shard="clients", **kw).dist_sq
 
         cold, warm = _timed(clients_run)
+        # Refresh work scales with M while p = 1/M keeps ~1 refresh/round in
+        # expectation — the stress curve's MFU should therefore grow with M
+        # until the substrate overhead is amortized (docs/PERFORMANCE.md).
+        total_flops = sweep_flops(
+            "svrp", prob, num_rounds=num_steps, num_trials=n_seeds, p=1.0 / M
+        )
         curve[str(M)] = {
             "cold_s": cold,
             "warm_us": warm * 1e6,
             "rounds_per_s": num_steps / warm,
+            "flops_per_round": total_flops / num_steps,
+            "gflops_per_s": total_flops / warm / 1e9,
+            "mfu": total_flops / warm / peak_flops,
         }
         if M == 256:
             _, warm_batch = _timed(
@@ -368,6 +430,68 @@ def _client_scale(quick: bool) -> tuple[dict, dict]:
         "num_steps": num_steps,
         "rounds_per_s_vs_M": curve,
         "fig1_M3000": fig1,
+    }
+    return record, ratios
+
+
+def _prox_roofline(peak_flops: float, peak_source: str) -> tuple[dict, dict]:
+    """Absolute roofline-fraction microbench: the fused quadratic prox
+    (Algorithm 7's batched GD update) at a compute-heavy shape, as a fraction
+    of the calibrated peak — the gated floor `quadratic_prox_roofline_frac`.
+
+    Two timings of the SAME math (held equal by tests/test_kernels_prox.py):
+
+    * xla      — `prox_gd_batched(use_kernel=False)`, the XLA-compiled fused
+      expression.  This is the gated number: a fixed-trip-count loop whose
+      analytic FLOPs are exact, so achieved/peak is a true roofline fraction
+      against the SAME calibration matmul's measured peak (same host, same
+      dtype — the fraction ports across runner generations).
+    * pallas_interpret — `use_kernel=True` on CPU runs the Pallas kernel
+      under the interpreter; its "MFU" prices emulation overhead, not the
+      kernel (docs/PERFORMANCE.md#honest-caveats).  Recorded informationally;
+      the compiled-kernel fraction is a real-TPU item.
+    """
+    from repro.core.prox import prox_gd_batched
+
+    B, d, T = 64, 128, 32
+    key = jax.random.PRNGKey(0)
+    G0 = jax.random.normal(key, (d, d))
+    G = G0 @ G0.T / d + jnp.eye(d)  # PD, well-conditioned
+    b = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+    z = jax.random.normal(jax.random.PRNGKey(2), (B, d))
+    grad_fn = lambda y: y @ G - b  # (B, d) -> (B, d): one shared client Hessian
+    L = float(jnp.linalg.eigvalsh(G)[-1])
+    # Analytic FLOPs per call: T iterations of grad (2 B d^2 + B d) + the
+    # 5-flop/element fused y-update (repro.core.flops prox_cost, gd branch).
+    flops_per_call = T * (2.0 * B * d * d + B * d + 5.0 * B * d)
+
+    xla_fn = jax.jit(
+        lambda z: prox_gd_batched(grad_fn, z, 0.05, L, T, use_kernel=False)
+    )
+    _, warm = _timed(lambda: xla_fn(z))
+    kern_fn = jax.jit(
+        lambda z: prox_gd_batched(grad_fn, z, 0.05, L, T,
+                                  use_kernel=True, interpret=True)
+    )
+    _, warm_kernel = _timed(lambda: kern_fn(z))
+
+    frac = flops_per_call / warm / peak_flops
+    frac_kernel = flops_per_call / warm_kernel / peak_flops
+    record = {
+        "B": B, "dim": d, "gd_steps": T,
+        "flops_per_call": flops_per_call,
+        "peak_gflops": peak_flops / 1e9,
+        "peak_source": peak_source,
+        "xla": {"warm_us": warm * 1e6,
+                "gflops_per_s": flops_per_call / warm / 1e9,
+                "roofline_frac": frac},
+        "pallas_interpret": {"warm_us": warm_kernel * 1e6,
+                             "gflops_per_s": flops_per_call / warm_kernel / 1e9,
+                             "roofline_frac": frac_kernel},
+    }
+    ratios = {
+        "quadratic_prox_roofline_frac": frac,
+        "pallas_interpret_prox_roofline_frac": frac_kernel,
     }
     return record, ratios
 
@@ -508,19 +632,57 @@ def run_structured(quick: bool = False, fed_lm: bool = False) -> dict:
         "svrp_minibatch", prob, grid=mb_grid, fused=True, **mb_kw
     ).dist_sq
 
+    # Analytic FLOPs per timed call (repro.core.flops; aggregate across the
+    # B trials of one sweep) — the numerators of the perf section's MFU.
+    q = lambda **kw: sweep_flops(
+        "svrp", prob, num_rounds=num_steps, num_trials=B, p=1.0 / M, **kw
+    )
+    mb_flops = sweep_flops(
+        "svrp_minibatch", prob, num_rounds=num_steps, num_trials=2 * n_seeds,
+        p=4.0 / M, batch_clients=4, prox_solver="gd", prox_steps=20,
+    )
+    flops_total = {
+        "loop/exact": q(prox_solver="exact"),
+        "loop/spectral": q(prox_solver="spectral"),
+        "batch/exact": q(prox_solver="exact"),
+        "batch/spectral": q(prox_solver="spectral"),
+        "session/spectral": q(prox_solver="spectral"),
+        "minibatch_loop/gd": mb_flops,
+        "minibatch_fused/gd": mb_flops,  # fused path: identical math
+    }
+
     n_dev = len(jax.devices())
     if n_dev > 1:
         variants["shard/spectral"] = lambda: run_batch(
             "svrp", prob, grid=grid, seeds=n_seeds, num_steps=num_steps,
             prox_solver="spectral", shard="data",
         ).dist_sq
-    variants.update(_logistic_variants(quick))
+        flops_total["shard/spectral"] = q(prox_solver="spectral")
+    logistic_variants, logistic_flops = _logistic_variants(quick)
+    variants.update(logistic_variants)
+    flops_total.update(logistic_flops)
+
+    # Per-backend peak for MFU: datasheet on TPU/GPU, measured-matmul
+    # calibration on CPU (float64 — the engine dtype under x64 here);
+    # docs/PERFORMANCE.md#per-backend-peaks.
+    peak = get_peak(dtype="float64")
 
     warm_us, cold_s = {}, {}
     for name, fn in variants.items():
         cold, w = _timed(fn)
         warm_us[name] = w * 1e6
         cold_s[name] = cold
+
+    # Every timed section's roofline numbers: analytic FLOPs per round
+    # (aggregate over the sweep's trials), achieved GFLOP/s, MFU.
+    perf_sections = {
+        name: {
+            "flops_per_round": flops_total[name] / num_steps,
+            "gflops_per_s": flops_total[name] / (warm_us[name] / 1e6) / 1e9,
+            "mfu": flops_total[name] / (warm_us[name] / 1e6) / peak.flops,
+        }
+        for name in warm_us
+    }
 
     speedups = {
         "batch_spectral_vs_loop_exact": warm_us["loop/exact"] / warm_us["batch/spectral"],
@@ -566,12 +728,32 @@ def run_structured(quick: bool = False, fed_lm: bool = False) -> dict:
         speedups["shard_spectral_vs_batch_spectral"] = (
             warm_us["batch/spectral"] / warm_us["shard/spectral"]
         )
-    pool_scale, pool_ratios = _pool_scale(quick)
+    pool_scale, pool_ratios = _pool_scale(quick, peak.flops)
     speedups.update(pool_ratios)
-    client_scale, client_ratios = _client_scale(quick)
+    client_scale, client_ratios = _client_scale(quick, peak.flops)
     speedups.update(client_ratios)
     comm_bytes, byte_ratios = _comm_bytes_section()
     speedups.update(byte_ratios)
+    prox_roofline, roofline_ratios = _prox_roofline(peak.flops, peak.source)
+    speedups.update(roofline_ratios)
+    for P, v in pool_scale["aggregate_rounds_per_s_vs_tenants"].items():
+        perf_sections[f"pool_scale/P{P}"] = {
+            k: v[k] for k in ("flops_per_round", "gflops_per_s", "mfu")
+        }
+    for Mc, v in client_scale["rounds_per_s_vs_M"].items():
+        perf_sections[f"client_scale/M{Mc}"] = {
+            k: v[k] for k in ("flops_per_round", "gflops_per_s", "mfu")
+        }
+    perf_sections["prox_roofline/xla"] = {
+        "flops_per_round": prox_roofline["flops_per_call"] / prox_roofline["gd_steps"],
+        "gflops_per_s": prox_roofline["xla"]["gflops_per_s"],
+        "mfu": prox_roofline["xla"]["roofline_frac"],
+    }
+    perf_sections["prox_roofline/pallas_interpret"] = {
+        "flops_per_round": prox_roofline["flops_per_call"] / prox_roofline["gd_steps"],
+        "gflops_per_s": prox_roofline["pallas_interpret"]["gflops_per_s"],
+        "mfu": prox_roofline["pallas_interpret"]["roofline_frac"],
+    }
 
     out = {
         "bench": "sweep_bench",
@@ -582,9 +764,15 @@ def run_structured(quick: bool = False, fed_lm: bool = False) -> dict:
         "timings_us": warm_us,
         "cold_compile_s": cold_s,
         "speedups": speedups,
+        "perf": {
+            "peak_gflops": peak.flops / 1e9,
+            "peak_source": peak.source,
+            "sections": perf_sections,
+        },
         "pool_scale": pool_scale,
         "client_scale": client_scale,
         "comm_bytes": comm_bytes,
+        "prox_roofline": prox_roofline,
     }
     if fed_lm:
         out["fed_lm_20m"] = _fed_lm_20m()

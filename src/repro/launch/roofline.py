@@ -17,147 +17,44 @@ undercount by ~L x.  We therefore:
   * COMPUTE/MEMORY: use an analytic per-(family x step) cost model
     (`analytic_cost`, formulas documented inline) — exact for matmul-dominated
     programs — and report the raw (loop-unaware) XLA numbers alongside.
+
+The GENERIC half of this machinery (the HLO computation parser, the
+loop-aware multipliers/collective stats, the `Roofline` record, and the
+per-backend peak table with its measured-CPU calibration) lives in
+`repro.utils.roofline` since the perf-accounting PR — it is shared with the
+federated engine's analytic model (`repro.core.flops`) and the bench harness
+(docs/PERFORMANCE.md).  This module keeps the TRANSFORMER-specific analytic
+cost formulas (`_fwd_cost` / `analytic_cost` / `model_flops`) and re-exports
+the moved names so existing imports (`repro.launch.roofline.analyze`,
+`tests/test_roofline.py`) keep working unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-import re
-from collections import defaultdict
 
-PEAK_FLOPS = 197e12  # bf16 / chip
-HBM_BW = 819e9  # B/s / chip
-ICI_BW = 50e9  # B/s / link / chip
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
-}
-
-_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
-_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
-_REF_RE = re.compile(r"(body|condition|to_apply|calls)=%?([\w\.\-]+)")
-_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_CONST_RE = re.compile(r"[su](?:32|64)\[\]\s+constant\((\d+)\)")
-_COLL_LINE = re.compile(
-    r"=\s*(\(?[^=]*?)\s+(" + "|".join(_COLL_OPS) + r")\("
+from repro.utils.roofline import (  # noqa: F401  (compat re-exports)
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    PEAKS,
+    BackendPeak,
+    Roofline,
+    _COLL_LINE,
+    _COLL_OPS,
+    _DTYPE_BYTES,
+    _OP_TRAFFIC_WEIGHT,
+    _shape_bytes_of,
+    _while_trip,
+    calibrated_cpu_peak,
+    collective_stats,
+    computation_multipliers,
+    get_peak,
+    mfu,
+    parse_computations,
 )
 
-
-def _shape_bytes_of(text: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(text):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims.strip():
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def parse_computations(txt: str):
-    """-> (blocks: name -> [lines], entry_name)."""
-    blocks: dict[str, list[str]] = {}
-    entry = None
-    current = None
-    for raw in txt.splitlines():
-        line = raw.rstrip()
-        stripped = line.strip()
-        if current is None:
-            m = _COMP_HDR.match(stripped)
-            if m and stripped.endswith("{"):
-                current = m.group(2)
-                blocks[current] = []
-                if m.group(1):
-                    entry = current
-            continue
-        if stripped == "}":
-            current = None
-            continue
-        blocks[current].append(stripped)
-    return blocks, entry
-
-
-def _while_trip(cond_lines: list[str]) -> int:
-    """Trip count of a while whose condition is `i < N`: the N appears as an
-    s32 constant inside the condition computation.  Heuristic: max constant."""
-    consts = [int(m.group(1)) for line in cond_lines for m in _CONST_RE.finditer(line)]
-    return max(consts) if consts else 1
-
-
-def computation_multipliers(txt: str) -> dict[str, float]:
-    """How many times each computation executes per program invocation."""
-    blocks, entry = parse_computations(txt)
-    mult: dict[str, float] = defaultdict(float)
-
-    def visit(name: str, m: float, depth=0):
-        if name not in blocks or depth > 50:
-            return
-        mult[name] += m
-        for line in blocks[name]:
-            # whiles: body/cond scaled by the trip count
-            if " while(" in line:
-                refs = dict((k, v) for k, v in _REF_RE.findall(line))
-                cond = refs.get("condition")
-                body = refs.get("body")
-                trip = _while_trip(blocks.get(cond, [])) if cond else 1
-                if body:
-                    visit(body, m * trip, depth + 1)
-                if cond:
-                    visit(cond, m * (trip + 1), depth + 1)
-                continue
-            for kind, ref in _REF_RE.findall(line):
-                if kind in ("calls", "to_apply"):
-                    visit(ref, m, depth + 1)
-            bm = _BRANCH_RE.search(line)
-            if bm:
-                for b in bm.group(1).split(","):
-                    visit(b.strip().lstrip("%"), m, depth + 1)
-
-    if entry is None:
-        return {}
-    visit(entry, 1.0)
-    return dict(mult)
-
-
-# Per-device wire-traffic weight per output byte, ring algorithms:
-#   all-reduce = reduce-scatter + all-gather over the full buffer ~ 2x
-#   all-gather / reduce-scatter / all-to-all / permute ~ 1x
-_OP_TRAFFIC_WEIGHT = {
-    "all-reduce": 2.0,
-    "all-gather": 1.0,
-    "reduce-scatter": 1.0,
-    "all-to-all": 1.0,
-    "collective-permute": 1.0,
-}
-
-
-def collective_stats(txt: str):
-    """(wire bytes_per_device by op kind, counts by op kind), loop-weighted."""
-    blocks, entry = parse_computations(txt)
-    mults = computation_multipliers(txt)
-    bytes_by: dict[str, float] = defaultdict(float)
-    counts: dict[str, float] = defaultdict(float)
-    for name, lines in blocks.items():
-        m = mults.get(name, 0.0)
-        if m == 0.0:
-            continue
-        for line in lines:
-            cm = _COLL_LINE.search(line)
-            if not cm:
-                continue
-            out_shapes, op = cm.groups()
-            bytes_by[op] += m * _shape_bytes_of(out_shapes) * _OP_TRAFFIC_WEIGHT[op]
-            counts[op] += m
-    return dict(bytes_by), dict(counts)
-
-
 # --------------------------------------------------------------------------
-#  Analytic compute/memory model
+#  Analytic compute/memory model (transformer families)
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class StepCost:
@@ -282,57 +179,6 @@ def analytic_cost(cfg, shape_name: str, *, kind: str, train_mode: str = "svrp",
 
 
 # --------------------------------------------------------------------------
-@dataclasses.dataclass
-class Roofline:
-    flops: float  # analytic, all devices
-    hbm_bytes: float
-    coll_bytes_per_device: float
-    chips: int
-    coll_breakdown: dict
-    coll_counts: dict
-    xla_flops_flat: float  # raw cost_analysis (loop-unaware), per device
-    xla_bytes_flat: float
-    detail: dict
-
-    @property
-    def compute_s(self) -> float:
-        return self.flops / (self.chips * PEAK_FLOPS)
-
-    @property
-    def memory_s(self) -> float:
-        return self.hbm_bytes / (self.chips * HBM_BW)
-
-    @property
-    def collective_s(self) -> float:
-        return self.coll_bytes_per_device / ICI_BW
-
-    @property
-    def dominant(self) -> str:
-        terms = {
-            "compute": self.compute_s,
-            "memory": self.memory_s,
-            "collective": self.collective_s,
-        }
-        return max(terms, key=terms.get)
-
-    def as_dict(self) -> dict:
-        return {
-            "flops": self.flops,
-            "hbm_bytes": self.hbm_bytes,
-            "coll_bytes_per_device": self.coll_bytes_per_device,
-            "chips": self.chips,
-            "compute_s": self.compute_s,
-            "memory_s": self.memory_s,
-            "collective_s": self.collective_s,
-            "dominant": self.dominant,
-            "coll_breakdown": self.coll_breakdown,
-            "coll_counts": self.coll_counts,
-            "xla_flops_flat": self.xla_flops_flat,
-            "xla_bytes_flat": self.xla_bytes_flat,
-            "detail": {k: float(v) for k, v in self.detail.items() if isinstance(v, (int, float))},
-        }
-
-
 def analyze(compiled, chips: int, cfg=None, shape_name: str | None = None,
             kind: str | None = None, train_mode: str = "svrp",
             local_steps: int = 2, refresh_exact: bool = True) -> Roofline:

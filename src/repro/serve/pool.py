@@ -337,6 +337,15 @@ class SessionPool:
         self.wire_bytes_per_vector = wire_vector_bytes(
             session._cfg.get("channel"), d, session._x0.dtype.itemsize
         )
+        # Analytic per-round FLOPs model (repro.core.flops) — valid for every
+        # tenant, because admission requires the same (algo, statics, problem
+        # shapes) signature the model is derived from.
+        from repro.core.flops import round_model
+
+        self.flops_model = round_model(
+            self._algo, session._problem,
+            **{k: v for k, v in session._cfg.items() if k != "prox_R"},
+        )
 
     # -------------------------------------------------------------- stepping
     def step(self, n: int = 1) -> tuple[jax.Array, jax.Array]:
@@ -506,4 +515,16 @@ class SessionPool:
             self._drain(t)
             if t.session.t:
                 total += int(t.session.comm_bytes[:, -1].sum())
+        return total
+
+    @property
+    def total_flops(self) -> float:
+        """Analytic FLOPs across every tenant ever admitted — the compute
+        mirror of `total_comm_bytes` (exact per trial; see
+        `repro.core.flops.ledger_flops` and docs/PERFORMANCE.md)."""
+        total = 0.0
+        for t in self._tenants.values():
+            self._drain(t)
+            if t.session.t:
+                total += float(t.session.flops[:, -1].sum())
         return total

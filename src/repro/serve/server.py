@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channel import wire_vector_bytes
+from repro.core.flops import flops_at, round_model
 from repro.core.rounds import ROUND_DEFS, make_registry_ops
 from repro.experiments.spec import ALGOS, _REQUIRED
 from repro.serve.donation import donate_argnums_for
@@ -201,6 +202,10 @@ class FedRoundServer:
         self._wire_bytes = wire_vector_bytes(
             channel, int(np.prod(self._x0.shape)), self._x0.dtype.itemsize
         )
+        # Analytic per-round FLOPs model: cumulative FLOPs are exactly
+        # recoverable from (round index, cumulative comm) — see
+        # repro.core.flops and docs/PERFORMANCE.md.
+        self._flops_model = round_model(algo, problem, **binding)
 
         def _ops(mask):
             # Rebuilt inside the trace: same registry binding as the scan
@@ -250,13 +255,14 @@ class FedRoundServer:
             return self._run_pool(num_rounds)
         start = time.perf_counter()
 
-        def drain_one(t0: float, d2: Any, comm: Any) -> None:
+        def drain_one(t0: float, round_idx: int, d2: Any, comm: Any) -> None:
             d2_host = float(d2)  # blocks until the round's result is ready
             now = time.perf_counter()
             comm_host = int(comm)
             self.stats.record(
                 now - t0, now - start, d2_host, comm_host,
                 comm_bytes=comm_host * self._wire_bytes,
+                flops=float(flops_at(self._flops_model, round_idx, comm_host)),
             )
 
         readback = PipelinedReadback(self._depth, drain_one)
@@ -266,7 +272,7 @@ class FedRoundServer:
             t0 = time.perf_counter()
             self._state, (d2, comm) = self._round_fn(self._state, key_t, mask)
             self._round_idx += 1
-            readback.push(t0, d2, comm)
+            readback.push(t0, self._round_idx, d2, comm)
         readback.flush()
         return self.stats
 
@@ -284,26 +290,58 @@ class FedRoundServer:
         # tenants ran before this call (no chunk is in flight yet, so the
         # host conversion here cannot stall the pipeline).
         base = np.zeros((pool.capacity,), dtype=np.int64)
+        rounds_base = np.zeros((pool.capacity,), dtype=np.int64)
         for tid in pool.tenant_ids(resident_only=True):
             ses = pool.session(tid)
             if ses.t:
-                base[pool._tenants[tid].slot] = int(
-                    np.asarray(ses.comm[:, -1]).sum()
-                )
+                slot = pool._tenants[tid].slot
+                base[slot] = int(np.asarray(ses.comm[:, -1]).sum())
+                rounds_base[slot] = ses.t
         served = getattr(self, "_comm_served", 0)
+        flops_served = getattr(self, "_flops_served", 0.0)
+        model = getattr(pool, "flops_model", None)
 
         def drain_one(t0: float, active: np.ndarray, d2: Any, comm: Any) -> None:
-            nonlocal served
+            nonlocal served, flops_served
             d2_host = np.asarray(d2)  # blocks until the tick's result is ready
             now = time.perf_counter()
             comm_host = np.asarray(comm)  # (P, B, 1) cumulative, masked lanes 0
             mean_d2 = float(d2_host[active, :, -1].mean())
             lane_totals = comm_host[:, :, -1].sum(axis=1).astype(np.int64)
-            served += int((lane_totals - base)[active].sum())
+            delta = int((lane_totals - base)[active].sum())
+            served += delta
             base[active] = lane_totals[active]
+            if model is not None:
+                # Exact aggregate FLOPs of this tick: each active lane ran B
+                # trials 1 round; inits are charged to trials at round 0 (or
+                # at a Catalyst stage boundary), then the refresh count falls
+                # out of the comm delta — see repro.core.flops.tick_flops.
+                B = comm_host.shape[1]
+                if model.stage_rounds:
+                    init_lanes = active & (rounds_base % model.stage_rounds == 0)
+                elif model.comm_init:
+                    init_lanes = active & (rounds_base == 0)
+                else:
+                    init_lanes = np.zeros_like(active)
+                inits = int(np.sum(init_lanes)) * B
+                trial_rounds = int(np.sum(active)) * B
+                if model.comm_refresh:
+                    refreshes = max(round(
+                        (delta - inits * model.comm_init
+                         - trial_rounds * model.comm_base) / model.comm_refresh
+                    ), 0)
+                else:
+                    refreshes = 0
+                flops_served += (
+                    inits * model.init_flops
+                    + trial_rounds * model.base_flops
+                    + refreshes * model.refresh_flops
+                )
+            rounds_base[active] += 1
             self.stats.record(
                 now - t0, now - start, mean_d2, served,
                 comm_bytes=served * pool.wire_bytes_per_vector,
+                flops=flops_served if model is not None else None,
             )
 
         readback = PipelinedReadback(self._depth, drain_one)
@@ -317,4 +355,5 @@ class FedRoundServer:
             readback.push(t0, active, d2, comm)
         readback.flush()
         self._comm_served = served
+        self._flops_served = flops_served
         return self.stats

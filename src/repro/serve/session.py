@@ -549,6 +549,16 @@ class FedSession:
         `experiments.runner.ledger_bytes`)."""
         return ledger_bytes(self._cfg, self._x0, self.comm)
 
+    @property
+    def flops(self) -> np.ndarray:
+        """(B, t) cumulative analytic-FLOPs ledger — the compute mirror of
+        `comm_bytes`, exact per trial (refresh rounds reconstructed from the
+        comm trajectory; see `repro.core.flops.ledger_flops` and
+        docs/PERFORMANCE.md)."""
+        from repro.core.flops import ledger_flops
+
+        return ledger_flops(self._algo, self._cfg, self._problem, self.comm)
+
     def _chunk_call(self, state, keys_bn):
         """One batch-of-trials chunk on the session's device substrate
         (batched: plain jit; clients: shard_mapped over the padded problem)."""

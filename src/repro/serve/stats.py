@@ -57,10 +57,11 @@ class ServeStats:
         self.dist_sq: list[float] = []  # server dist-to-opt after the round
         self.comm: list[int] = []  # cumulative communication steps
         self.comm_bytes: list[int] = []  # cumulative wire bytes (when priced)
+        self.flops: list[float] = []  # cumulative analytic FLOPs (when priced)
 
     def record(
         self, latency_s: float, elapsed_s: float, dist_sq: float, comm: int,
-        comm_bytes: int | None = None,
+        comm_bytes: int | None = None, flops: float | None = None,
     ) -> None:
         self.latencies_s.append(float(latency_s))
         self.elapsed_s.append(float(elapsed_s))
@@ -68,6 +69,8 @@ class ServeStats:
         self.comm.append(int(comm))
         if comm_bytes is not None:
             self.comm_bytes.append(int(comm_bytes))
+        if flops is not None:
+            self.flops.append(float(flops))
 
     @property
     def rounds(self) -> int:
@@ -97,6 +100,15 @@ class ServeStats:
             out["total_comm"] = 0
         if self.comm_bytes:
             out["total_comm_bytes"] = self.comm_bytes[-1]
+        if self.flops:
+            # Cumulative analytic FLOPs (repro.core.flops) and the achieved
+            # rate over the run's wall clock — the serving-side MFU numerator
+            # (docs/PERFORMANCE.md#mfu-methodology).
+            out["total_flops"] = self.flops[-1]
+            total = self.elapsed_s[-1] if self.elapsed_s else 0.0
+            out["gflops_per_sec"] = (
+                self.flops[-1] / total / 1e9 if total > 0 else float("nan")
+            )
         return out
 
     def trace(self) -> np.ndarray:
@@ -121,15 +133,15 @@ class ServeStats:
     def markdown(self, title: str = "Federated round server") -> str:
         """A `$GITHUB_STEP_SUMMARY`-ready table (CI quickstart job)."""
         s = self.summary()
-        return "\n".join(
-            [
-                f"### {title}",
-                "",
-                "| rounds | rounds/sec | p50 (ms) | p95 (ms) | p99 (ms) | final dist^2 | comm |",
-                "|---:|---:|---:|---:|---:|---:|---:|",
-                f"| {s['rounds']} | {s['rounds_per_sec']:.1f} | {s['p50_ms']:.2f} "
-                f"| {s['p95_ms']:.2f} | {s['p99_ms']:.2f} "
-                f"| {s['final_dist_sq']:.3e} | {s['total_comm']} |",
-                "",
-            ]
+        hdr = "| rounds | rounds/sec | p50 (ms) | p95 (ms) | p99 (ms) | final dist^2 | comm |"
+        sep = "|---:|---:|---:|---:|---:|---:|---:|"
+        row = (
+            f"| {s['rounds']} | {s['rounds_per_sec']:.1f} | {s['p50_ms']:.2f} "
+            f"| {s['p95_ms']:.2f} | {s['p99_ms']:.2f} "
+            f"| {s['final_dist_sq']:.3e} | {s['total_comm']} |"
         )
+        if "gflops_per_sec" in s:
+            hdr += " GFLOP/s |"
+            sep += "---:|"
+            row += f" {s['gflops_per_sec']:.2f} |"
+        return "\n".join([f"### {title}", "", hdr, sep, row, ""])

@@ -1,3 +1,3 @@
-from repro.utils import tree
+from repro.utils import roofline, tree
 
-__all__ = ["tree"]
+__all__ = ["roofline", "tree"]

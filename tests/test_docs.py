@@ -34,7 +34,8 @@ def _doc_ids():
 
 def test_docs_tree_exists():
     names = {p.name for p in DOC_FILES}
-    assert {"README.md", "ARCHITECTURE.md", "SCALING.md", "BENCHMARKS.md"} <= names
+    assert {"README.md", "ARCHITECTURE.md", "SCALING.md", "BENCHMARKS.md",
+            "PERFORMANCE.md"} <= names
 
 
 @pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids())
@@ -64,9 +65,10 @@ def test_python_snippet_imports(doc):
 
 
 def test_docs_cross_reference_each_other():
-    # Each docs page names its companions; README links all three.
+    # Each docs page names its companions; README links all four.
     readme = (REPO / "README.md").read_text()
-    for page in ("ARCHITECTURE.md", "SCALING.md", "BENCHMARKS.md"):
+    for page in ("ARCHITECTURE.md", "SCALING.md", "BENCHMARKS.md",
+                 "PERFORMANCE.md"):
         assert f"docs/{page}" in readme, f"README does not link docs/{page}"
 
 
@@ -83,3 +85,21 @@ def test_pool_docs_sections_exist():
     readme = (REPO / "README.md").read_text()
     assert "SessionPool" in readme
     assert "multi-tenant-serving-the-session-pool" in readme
+
+
+def test_performance_docs_sections_exist():
+    # The perf-accounting layer is documented where the code points: the
+    # anchors referenced from flops.py / roofline.py / check_bench must
+    # exist as headings, and the companion pages must carry their halves.
+    perf = (REPO / "docs" / "PERFORMANCE.md").read_text()
+    for heading in ("## The roofline model", "## The FLOP model",
+                    "## Per-backend peaks", "## MFU methodology",
+                    "## The absolute floor", "## Honest caveats"):
+        assert heading in perf, f"PERFORMANCE.md lost section {heading!r}"
+    assert "quadratic_prox_roofline_frac" in perf
+    bench = (REPO / "docs" / "BENCHMARKS.md").read_text()
+    assert "quadratic_prox_roofline_frac" in bench
+    assert "PERFORMANCE.md" in bench
+    arch = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    assert "## The perf-accounting layer" in arch
+    assert "tests/test_flops.py" in arch

@@ -1,0 +1,421 @@
+"""Perf-accounting layer: analytic FLOPs model vs XLA, HLO parser units.
+
+Three suites (docs/PERFORMANCE.md documents every formula under test):
+
+* HLO-parser units on HANDWRITTEN snippets — while trip counts, call /
+  branch_computations multipliers, loop-weighted collective byte counts —
+  pinning the grammar `repro.utils.roofline` extracts from optimized HLO.
+* Closed-form FLOP counts for quadratic SPPM/SVRP rounds checked against
+  `compiled.cost_analysis()`.  Two measured XLA caveats are handled
+  explicitly rather than hidden in slack tolerances:
+    - cost_analysis charges a dynamic client-index gather (`take(A, m)` with
+      traced m) as ~2 d^2 "flops" of compute; the tests SELF-CALIBRATE that
+      quirk (traced-index cost minus fixed-index cost) and the corrected
+      round counts then match the model to < 2%;
+    - cost_analysis is loop-UNAWARE (while bodies counted once) and counts
+      BOTH lax.cond branches — so a single SVRP round compares against
+      base + refresh, and gd-prox totals are reconstructed loop-aware from
+      the flat count + (T - 1) standalone body compilations, with the trip
+      count T recovered from the real compiled HLO by the parser.
+* Ledger exactness — refresh rounds reconstructed from the comm trajectory
+  (`ledger_flops` / `flops_at` / `tick_flops`), Catalyst per-stage inits,
+  hoisted spectral preparation counted once per sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flops import (
+    channel_flops_per_vector,
+    flops_at,
+    ledger_flops,
+    problem_prims,
+    prox_cost,
+    round_cost,
+    round_model,
+    sweep_flops,
+    tick_flops,
+)
+from repro.core.rounds import ROUND_DEFS, make_registry_ops
+from repro.core.sppm import SPPMParams
+from repro.core.svrp import SVRPParams
+from repro.experiments.spec import ALGOS
+from repro.problems import make_synthetic_quadratic
+from repro.utils.roofline import (
+    calibrated_cpu_peak,
+    collective_stats,
+    computation_multipliers,
+    get_peak,
+    parse_computations,
+    xla_flops,
+)
+
+M, D = 8, 64
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_synthetic_quadratic(num_clients=M, dim=D)
+
+
+# ===================================================== HLO parser (handwritten)
+
+# A while loop of trip count 10 (condition: i < 10), whose body runs an
+# all-reduce over f32[128] and calls %add via to_apply.
+_HLO_WHILE = """\
+HloModule handwritten
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i1 = s32[] add(%i, %one)
+  %ar = f32[128] all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], f32[128]) tuple(%i1, %ar)
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (init: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %init = (s32[], f32[128]) parameter(0)
+  ROOT %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+}
+"""
+
+_HLO_BRANCH = """\
+HloModule branches
+
+%bt (x: f32[16]) -> f32[16] {
+  %x = f32[16] parameter(0)
+  ROOT %r = f32[16] add(%x, %x)
+}
+
+%bf (x: f32[16]) -> f32[16] {
+  %x = f32[16] parameter(0)
+  ROOT %ag = f32[16] all-gather(%x), dimensions={0}
+}
+
+ENTRY %main (p: s32[], x: f32[16]) -> f32[16] {
+  %p = s32[] parameter(0)
+  %x = f32[16] parameter(1)
+  ROOT %c = f32[16] conditional(%p, %x, %x), branch_computations={%bt, %bf}
+}
+"""
+
+
+def test_parse_computations_blocks_and_entry():
+    blocks, entry = parse_computations(_HLO_WHILE)
+    assert entry == "main"
+    assert set(blocks) == {"add", "body", "cond", "main"}
+    assert any("while(" in ln for ln in blocks["main"])
+
+
+def test_while_trip_count_multipliers():
+    mult = computation_multipliers(_HLO_WHILE)
+    # body runs once per trip; the condition is evaluated trip + 1 times;
+    # %add is reached through the body's all-reduce to_apply, so x10 too.
+    assert mult["main"] == 1.0
+    assert mult["body"] == 10.0
+    assert mult["cond"] == 11.0
+    assert mult["add"] == 10.0
+
+
+def test_collective_bytes_loop_and_traffic_weighted():
+    bytes_by, counts = collective_stats(_HLO_WHILE)
+    # f32[128] = 512 B output, all-reduce wire weight 2.0, x10 trips.
+    assert counts == {"all-reduce": 10.0}
+    assert bytes_by == {"all-reduce": 10 * 512 * 2.0}
+
+
+def test_branch_computations_both_visited():
+    mult = computation_multipliers(_HLO_BRANCH)
+    assert mult["bt"] == 1.0 and mult["bf"] == 1.0
+    bytes_by, counts = collective_stats(_HLO_BRANCH)
+    # all-gather weight 1.0, one visit, f32[16] = 64 B.
+    assert bytes_by == {"all-gather": 64.0}
+    assert counts == {"all-gather": 1.0}
+
+
+def test_unreferenced_computation_not_multiplied():
+    txt = _HLO_BRANCH.replace(
+        "ROOT %c = f32[16] conditional(%p, %x, %x), branch_computations={%bt, %bf}",
+        "ROOT %c = f32[16] add(%x, %x)",
+    )
+    mult = computation_multipliers(txt)
+    assert "bt" not in mult and "bf" not in mult
+
+
+# ===================================================== model vs cost_analysis
+
+
+def _round_xla_flops(algo, prob, hp, **static):
+    x0 = jnp.zeros(prob.dim)
+    ops = make_registry_ops(
+        algo, prob, x0, prob.minimizer(), hp, batched=False, **static
+    )
+    rd = ROUND_DEFS[algo]
+    state = rd.init(ops, x0)
+    return xla_flops(lambda s, k: rd.round(ops, s, k), state, jax.random.PRNGKey(0))
+
+
+def _gather_quirks(prob):
+    """cost_analysis's extra "flops" for a TRACED client-index gather.
+
+    `take(Q, m)` with traced m is charged ~2 d^2 by XLA's cost model even
+    though it is a gather (memory traffic, not arithmetic).  Measure it as
+    (traced-index cost) - (fixed-index cost) for the two gather sites a
+    round has — the prox and the oracle grad — so the round-level
+    comparisons below can correct for it instead of hiding it in slack.
+    """
+    factors = prob.prox_factors()
+    z = jnp.ones(prob.dim)
+    m = jnp.int32(3)
+    quirk_prox = xla_flops(
+        lambda mm, zz: prob.prox_spectral(mm, zz, 0.1, factors), m, z
+    ) - xla_flops(lambda zz: prob.prox_spectral(jnp.int32(3), zz, 0.1, factors), z)
+    quirk_grad = xla_flops(lambda mm, zz: prob.grad(mm, zz), m, z) - xla_flops(
+        lambda zz: prob.grad(jnp.int32(3), zz), z
+    )
+    return quirk_prox, quirk_grad
+
+
+def test_component_grad_counts_exact(prob):
+    pr = problem_prims(prob)
+    x = jnp.ones(D)
+    # Fixed-index client grad: XLA and the model agree EXACTLY (2 d^2 + d).
+    assert xla_flops(lambda y: prob.grad(jnp.int32(0), y), x) == pr.grad_flops
+    # full_grad executes the HOISTED mean A_bar @ x - b_bar — one matvec.
+    assert xla_flops(prob.full_grad, x) == pr.full_grad_flops
+    assert pr.detail["full_grad_hoisted"] is True
+    assert pr.detail["federated_full_grad_flops"] == pytest.approx(
+        M * pr.grad_flops + (M + 1) * D
+    )
+
+
+def test_sppm_spectral_round_matches_cost_analysis(prob):
+    quirk_prox, _ = _gather_quirks(prob)
+    hp = SPPMParams(eta=jnp.asarray(0.1), smoothness=prob.smoothness_max())
+    got = _round_xla_flops("sppm", prob, hp, prox_solver="spectral")
+    model = round_model("sppm", prob, prox_solver="spectral")
+    assert (got - quirk_prox) == pytest.approx(model.base_flops, rel=0.02)
+
+
+def test_svrp_spectral_round_matches_cost_analysis(prob):
+    # cost_analysis counts BOTH lax.cond branches, so one compiled SVRP
+    # round prices base + refresh (the anchor recompute), not E[cost].
+    quirk_prox, quirk_grad = _gather_quirks(prob)
+    hp = SVRPParams(
+        eta=jnp.asarray(0.1), p=jnp.asarray(0.2), smoothness=prob.smoothness_max()
+    )
+    got = _round_xla_flops("svrp", prob, hp, prox_solver="spectral")
+    model = round_model("svrp", prob, prox_solver="spectral")
+    corrected = got - quirk_prox - quirk_grad
+    assert corrected == pytest.approx(
+        model.base_flops + model.refresh_flops, rel=0.02
+    )
+
+
+def test_gd_prox_loop_aware_reconstruction(prob):
+    """cost_analysis counts the gd fori_loop body ONCE; reconstruct the
+    loop-aware total as flat + (T - 1) x standalone body and compare."""
+    hp = SPPMParams(eta=jnp.asarray(0.1), smoothness=prob.smoothness_max())
+    flat = {
+        T: _round_xla_flops("sppm", prob, hp, prox_solver="gd", prox_steps=T)
+        for T in (2, 8)
+    }
+    # Loop-unawareness, demonstrated: the flat count is trip-independent.
+    assert flat[2] == flat[8]
+
+    # One gd iteration, compiled standalone, counts EXACTLY the model's
+    # per-iteration term (grad + 5 d elementwise).
+    pr = problem_prims(prob)
+    eta = 0.1
+    beta = 1.0 / (float(prob.smoothness_max()) + 1.0 / eta)
+    A0, b0 = prob.A[0], prob.b[0]
+    z = jnp.ones(D)
+    body = lambda y: y - beta * ((A0 @ y - b0) + (y - z) * (1.0 / eta))
+    body_flops = xla_flops(body, z)
+    assert body_flops == pr.grad_flops + 5 * D
+
+    T = 8
+    model = round_model("sppm", prob, prox_solver="gd", prox_steps=T)
+    reconstructed = flat[T] + (T - 1) * body_flops
+    # flat still carries the traced-gather quirk + RNG, hence the 10%.
+    assert reconstructed == pytest.approx(model.base_flops, rel=0.10)
+
+
+def test_gd_trip_count_recovered_from_real_hlo(prob):
+    T = 7
+    hp = SPPMParams(eta=jnp.asarray(0.1), smoothness=prob.smoothness_max())
+    x0 = jnp.zeros(D)
+    ops = make_registry_ops(
+        "sppm", prob, x0, prob.minimizer(), hp, batched=False,
+        prox_solver="gd", prox_steps=T,
+    )
+    rd = ROUND_DEFS["sppm"]
+    state = rd.init(ops, x0)
+    txt = (
+        jax.jit(lambda s, k: rd.round(ops, s, k))
+        .lower(state, jax.random.PRNGKey(0))
+        .compile()
+        .as_text()
+    )
+    mult = computation_multipliers(txt)
+    # The parser infers the fori_loop trip count from the optimized HLO:
+    # some computation (the loop body) executes exactly T times.
+    assert T in {round(v) for v in mult.values()}
+
+
+# ===================================================== ledger exactness
+
+
+def test_ledger_flops_reconstructs_refreshes_exactly(prob):
+    model = round_model("svrp", prob, prox_solver="spectral")
+    K, refresh_rounds = 10, {3, 7}
+    comm, c = [], model.comm_init
+    for k in range(1, K + 1):
+        c += model.comm_base + (model.comm_refresh if k in refresh_rounds else 0)
+        comm.append(c)
+    led = ledger_flops("svrp", {"prox_solver": "spectral"}, prob, np.asarray(comm))
+    assert led.shape == (K,)
+    for k in range(1, K + 1):
+        r = sum(1 for j in refresh_rounds if j <= k)
+        expect = model.init_flops + k * model.base_flops + r * model.refresh_flops
+        assert led[k - 1] == pytest.approx(expect)
+
+
+def test_ledger_flops_ignores_prox_R_and_batches(prob):
+    model = round_model("sppm", prob)
+    comm = np.cumsum(np.full((3, 5), model.comm_base, dtype=np.int64), axis=1)
+    led = ledger_flops("sppm", {"prox_R": 1.0}, prob, comm)
+    assert led.shape == (3, 5)
+    assert np.allclose(led[:, -1], 5 * model.base_flops)
+
+
+def test_catalyzed_stage_inits(prob):
+    inner = 3
+    model = round_model("catalyzed_svrp", prob, inner_steps=inner)
+    assert model.stage_rounds == inner
+    k = np.arange(1, 7, dtype=np.float64)
+    comm = np.ceil(k / inner) * model.comm_init + k * model.comm_base
+    got = flops_at(model, k, comm)
+    inits = np.ceil(k / inner)
+    assert np.allclose(got, inits * model.init_flops + k * model.base_flops)
+
+
+def test_tick_flops_consistent_with_ledger(prob):
+    model = round_model("svrp", prob)
+    # 5 rounds from cold start, one refresh in the window.
+    delta = model.comm_init + 5 * model.comm_base + model.comm_refresh
+    got = tick_flops(model, delta, 5, prev_rounds=0)
+    assert got == pytest.approx(
+        model.init_flops + 5 * model.base_flops + model.refresh_flops
+    )
+    # Later window, no init, no refresh.
+    got = tick_flops(model, 4 * model.comm_base, 4, prev_rounds=5)
+    assert got == pytest.approx(4 * model.base_flops)
+
+
+def test_sweep_flops_counts_hoisted_spectral_once(prob):
+    model = round_model("svrp", prob, prox_solver="spectral")
+    hoisted = model.detail["hoisted_prepare_flops"]
+    assert hoisted == 9.0 * M * D**3
+    one = sweep_flops("svrp", prob, num_rounds=10, num_trials=1,
+                      prox_solver="spectral")
+    two = sweep_flops("svrp", prob, num_rounds=10, num_trials=2,
+                      prox_solver="spectral")
+    per_trial = 10 * model.base_flops + model.init_flops
+    assert one == pytest.approx(per_trial + hoisted)
+    # Doubling trials does NOT double the once-per-sweep eigh.
+    assert two == pytest.approx(2 * per_trial + hoisted)
+
+
+def test_round_cost_is_base_plus_p_refresh(prob):
+    model = round_model("svrp", prob)
+    rc = round_cost("svrp", prob, p=0.25)
+    assert rc.flops == pytest.approx(model.base_flops + 0.25 * model.refresh_flops)
+    assert rc.hbm_bytes == pytest.approx(model.base_bytes + 0.25 * model.refresh_bytes)
+
+
+# ===================================================== registry coverage
+
+
+def test_round_model_covers_every_algos_entry(prob):
+    static = {
+        "svrp_minibatch": {"batch_clients": 4},
+        "catalyzed_svrp": {"inner_steps": 4},
+        "composite": {"prox_R": 1.0},
+    }
+    for algo in ALGOS:
+        model = round_model(algo, prob, **static.get(algo, {}))
+        assert model.base_flops > 0 and np.isfinite(model.base_flops), algo
+        assert model.base_bytes > 0, algo
+        # init/refresh only where the registry's comm accounting has them.
+        assert (model.comm_init > 0) == (model.init_flops > 0), algo
+        if model.comm_refresh:
+            assert model.refresh_flops > 0, algo
+
+
+def test_channel_flops_charged_per_comm_vector(prob):
+    plain = round_model("svrp", prob)
+    q8 = round_model("svrp", prob, channel="quant8")
+    per_vec = channel_flops_per_vector("quant8", D)
+    assert per_vec == 6.0 * D
+    assert q8.base_flops - plain.base_flops == pytest.approx(per_vec * plain.comm_base)
+    assert q8.refresh_flops - plain.refresh_flops == pytest.approx(
+        per_vec * plain.comm_refresh
+    )
+    assert channel_flops_per_vector(None, D) == 0.0
+    assert channel_flops_per_vector("cast16", D) == float(D)
+
+
+def test_ceiling_solvers_flagged(prob):
+    pr = problem_prims(prob)
+    for solver, ceiling in (("exact", False), ("spectral", False), ("gd", False),
+                            ("newton", True), ("newton-cg", True),
+                            ("newton-fixed25", False)):
+        _, _, detail = prox_cost(pr, solver, 10)
+        assert detail["ceiling"] is ceiling, solver
+
+
+def test_unknown_inputs_raise(prob):
+    pr = problem_prims(prob)
+    with pytest.raises(ValueError, match="PERFORMANCE.md"):
+        problem_prims(object())
+    with pytest.raises(ValueError, match="PERFORMANCE.md"):
+        prox_cost(pr, "bisection", 10)
+    with pytest.raises(ValueError, match="PERFORMANCE.md"):
+        channel_flops_per_vector("topk", D)
+    with pytest.raises(ValueError, match="PERFORMANCE.md"):
+        round_model("fedavg_turbo", prob)
+
+
+# ===================================================== peaks
+
+
+def test_cpu_peak_calibrated_and_cached():
+    p1 = calibrated_cpu_peak(dtype="float32", n=128, reps=1)
+    p2 = calibrated_cpu_peak(dtype="float32", n=128, reps=1)
+    assert p1.flops > 0 and np.isfinite(p1.flops)
+    assert p1 is p2  # cached per (dtype, n): calibration runs once
+    assert "calibrated" in p1.source
+
+
+def test_get_peak_unknown_platform_raises():
+    with pytest.raises(ValueError, match="PEAKS"):
+        get_peak("quantum")
